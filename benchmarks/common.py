@@ -1,0 +1,402 @@
+"""Shared simulation harness for the paper's experiments.
+
+One entry point, ``run_experiment``, reproduces (at configurable scale):
+- Table 1  — fixed-device training, CIFAR-like, {IID, Dir(a)} x methods
+- Fig 6/7  — mobile-device training, CIFAR-like Shards, vs Gossip/OppCL/Local
+- Fig 8/9  — mobile-device training, IMU HAR
+under the random-walk mobility model (P_cross) or synthetic 4Q traces.
+
+Reduced sizes by default (CPU container); ``scale='paper'`` approaches the
+paper's 20-mule / 8-fixed / 2500-image setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import (CFLState, cfl_round, fedas_round, fedavg_round,
+                             gossip_step, local_step, oppcl_step)
+from repro.baselines.cfl import cfl_client_models
+from repro.configs.mule_cnn import CNNConfig
+from repro.configs.mule_lstm_cnn import LSTMCNNConfig
+from repro.core import PopulationConfig, init_population, population_step
+from repro.core.freshness import FreshnessConfig
+from repro.data import (dirichlet_partition, iid_partition, make_image_dataset,
+                        make_imu_dataset, shards_partition)
+from repro.data.partition import train_test_split
+from repro.mobility import (MobilityConfig, init_mobility, mobility_step,
+                            synth_foursquare_trace, trace_to_colocation)
+from repro.models.cnn import (accuracy, cnn_forward, init_cnn, init_lstm_cnn,
+                              lstm_cnn_forward, xent_loss)
+
+METHODS_FIXED = ("mlmule", "fedavg", "cfl", "fedas", "local")
+METHODS_MOBILE = ("mlmule", "gossip", "oppcl", "local", "mlmule+gossip")
+
+
+@dataclasses.dataclass
+class ExperimentConfig:
+    task: str = "image"            # image | har
+    mode: str = "fixed"            # fixed | mobile
+    method: str = "mlmule"
+    dist: str = "dir0.01"          # iid | dir<alpha> | shards
+    pattern: str = "0.1"           # P_cross value as str, or "4q"
+    steps: int = 300
+    eval_every: int = 50
+    n_mules: int = 12
+    n_fixed: int = 8
+    batch: int = 16
+    lr: float = 0.05
+    seed: int = 0
+    image_size: int = 16
+    n_super: int = 20
+    n_sub: int = 5
+    n_per_sub: int = 16
+    noise: float = 3.0
+    train_per_device: int = 32   # local-overfitting regime (paper operating point)
+    post_local_epochs: int = 1     # Table 1 "Post-Local" fine-tune
+    pretrain_steps: int = 120      # per-device local pretraining to the
+                                   # paper's 'accuracy stops improving' point
+    freshness_off: bool = False    # ablation: disable the staleness filter
+    gamma: float = 0.3
+
+
+# ---------------------------------------------------------------------------
+# data assembly
+# ---------------------------------------------------------------------------
+
+
+def _pad_to(idx_list: List[np.ndarray], rng) -> np.ndarray:
+    n = max(len(i) for i in idx_list)
+    out = []
+    for i in idx_list:
+        if len(i) < n:
+            i = np.concatenate([i, rng.choice(i, n - len(i))])
+        out.append(i)
+    return np.stack(out)
+
+
+def _image_data_fixed(cfg: ExperimentConfig):
+    """Per-fixed-device train/test arrays for the Table-1 setting."""
+    x, sup, sub = make_image_dataset(cfg.seed, cfg.n_per_sub, cfg.n_super,
+                                     cfg.n_sub, cfg.image_size, cfg.noise)
+    rng = np.random.default_rng(cfg.seed)
+    if cfg.dist == "iid":
+        parts = iid_partition(sup, cfg.n_fixed, cfg.seed)
+    elif cfg.dist.startswith("dir"):
+        parts = dirichlet_partition(sup, cfg.n_fixed, float(cfg.dist[3:]),
+                                    cfg.seed, min_per_part=24)
+    elif cfg.dist == "shards":
+        sh = shards_partition(sup, sub, seed=cfg.seed)
+        parts = [np.concatenate([sh["space_idx"][(a, s)],
+                                 sh["general_idx"][(a, s)]])
+                 for a in range(2) for s in range(4)]
+    else:
+        raise ValueError(cfg.dist)
+    tr, te = zip(*[train_test_split(p, 0.2, cfg.seed) for p in parts])
+    tr = [t[: cfg.train_per_device] for t in tr]
+    tr, te = _pad_to(list(tr), rng), _pad_to(list(te), rng)
+    return (jnp.asarray(x[tr]), jnp.asarray(sup[tr]),
+            jnp.asarray(x[te]), jnp.asarray(sup[te]))
+
+
+def _image_data_mobile(cfg: ExperimentConfig, mule_space: np.ndarray,
+                       mule_area: np.ndarray):
+    """Shards data on mules per Sec 4.3.1: space's sub-class + 5th sub-class."""
+    x, sup, sub = make_image_dataset(cfg.seed, cfg.n_per_sub, cfg.n_super,
+                                     cfg.n_sub, cfg.image_size, cfg.noise)
+    sh = shards_partition(sup, sub, seed=cfg.seed)
+    rng = np.random.default_rng(cfg.seed + 1)
+    tr_list, te_space = [], {}
+    for key, idx in sh["space_idx"].items():
+        te_space[key] = idx
+    for m in range(cfg.n_mules):
+        key = (int(mule_area[m]), int(mule_space[m]))
+        local = sh["space_idx"][key]
+        general = sh["general_idx"][key]
+        cap = max(cfg.train_per_device // 2, 8)
+        take = rng.choice(local, min(len(local), cap), replace=False)
+        takeg = rng.choice(general, min(len(general), cap), replace=False)
+        tr_list.append(np.concatenate([take, takeg]))
+    tr = _pad_to(tr_list, rng)
+    # per-space test sets (mule evaluated on its current space's data)
+    te_idx = _pad_to([sh["space_idx"][(a, s)] for a in range(2)
+                      for s in range(4)], rng)
+    return (jnp.asarray(x[tr]), jnp.asarray(sup[tr]),
+            jnp.asarray(x[te_idx]), jnp.asarray(sup[te_idx]))
+
+
+def _har_data_mobile(cfg: ExperimentConfig, mule_space, mule_area):
+    """IMU data per location; spaces map to EgoExo4D-like locations."""
+    x, y, loc = make_imu_dataset(cfg.seed, n_per_cell=cfg.n_per_sub)
+    rng = np.random.default_rng(cfg.seed + 2)
+    space_loc = rng.permutation(8)          # each space -> a location
+    tr_list = []
+    for m in range(cfg.n_mules):
+        sl = space_loc[int(mule_area[m]) * 4 + int(mule_space[m])]
+        idx = np.where(loc == sl)[0]
+        tr_list.append(rng.choice(idx, min(len(idx), 120), replace=False))
+    tr = _pad_to(tr_list, rng)
+    te_idx = _pad_to([np.where(loc == space_loc[f])[0][:60] for f in range(8)],
+                     rng)
+    return (jnp.asarray(x[tr]), jnp.asarray(y[tr]),
+            jnp.asarray(x[te_idx]), jnp.asarray(y[te_idx]))
+
+
+# ---------------------------------------------------------------------------
+# model / train / eval
+# ---------------------------------------------------------------------------
+
+
+def _model_fns(cfg: ExperimentConfig):
+    if cfg.task == "image":
+        mc = CNNConfig(image_size=cfg.image_size, conv_features=(8, 16),
+                       hidden=64, n_classes=cfg.n_super)
+        init = lambda k: init_cnn(k, mc)
+        fwd = cnn_forward
+    else:
+        mc = LSTMCNNConfig(conv_features=(16, 32), lstm_hidden=32, n_classes=4)
+        init = lambda k: init_lstm_cnn(k, mc)
+        fwd = lstm_cnn_forward
+
+    def train_fn(params, batch, key):
+        xb, yb = batch
+        g = jax.grad(lambda p: xent_loss(fwd(p, xb), yb))(params)
+        return jax.tree.map(lambda p, gg: p - cfg.lr * gg, params, g)
+
+    def eval_fn(params, xd, yd):
+        return accuracy(fwd(params, xd), yd)
+
+    return init, train_fn, eval_fn
+
+
+def _sample_batches(key, X, Y, batch):
+    """X: [P, N, ...] -> random [P, B, ...] minibatches."""
+    p, n = X.shape[0], X.shape[1]
+    idx = jax.random.randint(key, (p, batch), 0, n)
+    xb = jnp.take_along_axis(X, idx.reshape((p, batch) + (1,) * (X.ndim - 2)),
+                             axis=1)
+    yb = jnp.take_along_axis(Y, idx, axis=1)
+    return xb, yb
+
+
+# ---------------------------------------------------------------------------
+# mobility stream
+# ---------------------------------------------------------------------------
+
+
+def _mobility_stream(cfg: ExperimentConfig):
+    """Yields (fixed_id [M], exchange [M], pos [M,2], area [M]) per step."""
+    if cfg.pattern == "4q":
+        visits = synth_foursquare_trace(cfg.seed, n_users=cfg.n_mules,
+                                        n_places=8, n_steps=cfg.steps)
+        fid, exch = trace_to_colocation(visits, cfg.n_mules, cfg.steps)
+        pos = np.zeros((cfg.n_mules, 2), np.float32)
+        area = (fid.max(axis=0).clip(0) // 4).astype(np.int32)
+        state0 = None
+        def stream():
+            for t in range(cfg.steps):
+                yield (jnp.asarray(fid[t]), jnp.asarray(exch[t]),
+                       jnp.asarray(pos), jnp.asarray(area))
+        # initial space per mule: first visit (or 0)
+        first = np.zeros(cfg.n_mules, np.int64)
+        for m in range(cfg.n_mules):
+            v = fid[:, m][fid[:, m] >= 0]
+            first[m] = v[0] if len(v) else 0
+        return stream, first % 4, first // 4
+    mcfg = MobilityConfig(n_mules=cfg.n_mules, p_cross=float(cfg.pattern))
+    state = init_mobility(jax.random.PRNGKey(cfg.seed), mcfg)
+    from repro.mobility import space_of
+    s0 = np.asarray(space_of(state["pos"], mcfg.space_size)).clip(0)
+    a0 = np.asarray(state["area"])
+    step = jax.jit(lambda s: mobility_step(s, mcfg))
+
+    def stream():
+        s = state
+        for t in range(cfg.steps):
+            s, info = step(s)
+            yield (info["fixed_id"], info["exchange"], info["pos"], s["area"])
+    return stream, s0, a0
+
+
+# ---------------------------------------------------------------------------
+# main experiment driver
+# ---------------------------------------------------------------------------
+
+
+def run_experiment(cfg: ExperimentConfig) -> Dict:
+    t_start = time.time()
+    init, train_fn, eval_fn = _model_fns(cfg)
+    stream_fn, mule_space, mule_area = _mobility_stream(cfg)
+
+    if cfg.mode == "fixed":
+        Xtr, Ytr, Xte, Yte = _image_data_fixed(cfg)
+        n_clients = cfg.n_fixed
+    else:
+        if cfg.task == "image":
+            Xtr, Ytr, Xte, Yte = _image_data_mobile(cfg, mule_space, mule_area)
+        else:
+            Xtr, Ytr, Xte, Yte = _har_data_mobile(cfg, mule_space, mule_area)
+        n_clients = cfg.n_mules
+
+    key = jax.random.PRNGKey(cfg.seed + 100)
+    eval_v = jax.jit(jax.vmap(eval_fn))
+
+    # -- per-device local pretraining (paper Sec 4.2.1 / 4.3.1) --------------
+    vtrain = jax.jit(jax.vmap(train_fn))
+
+    def pretrain(models, key):
+        for i in range(cfg.pretrain_steps):
+            key, kb, kt = jax.random.split(key, 3)
+            batches = _sample_batches(kb, Xtr, Ytr, cfg.batch)
+            keys = jax.random.split(kt, jax.tree.leaves(models)[0].shape[0])
+            models = vtrain(models, batches, keys)
+        return models
+
+    pre_models = pretrain(jax.vmap(init)(
+        jax.random.split(jax.random.PRNGKey(cfg.seed), n_clients)),
+        jax.random.PRNGKey(cfg.seed + 7))
+
+    def eval_fixed_models(models):
+        """Evaluate stacked fixed-device models on their space test sets."""
+        return np.asarray(eval_v(models, Xte, Yte))
+
+    def eval_mobile_models(models, cur_fid):
+        """Each mule evaluated on the test set of its current/last space."""
+        fid = np.asarray(cur_fid).clip(0)
+        Xm = Xte[fid]
+        Ym = Yte[fid]
+        return np.asarray(eval_v(models, Xm, Ym))
+
+    traces = []
+    sizes = jnp.full((n_clients,), float(Xtr.shape[1]))
+
+    # ---------------- federated baselines (round-based, no mobility) --------
+    if cfg.method in ("fedavg", "cfl", "fedas"):
+        from repro.core.aggregation import weighted_average
+        n_rounds = cfg.steps // 10
+        model = weighted_average(pre_models, sizes)
+        if cfg.method == "cfl":
+            st = CFLState(clusters=[np.arange(n_clients)], models=[model],
+                          eps1=0.5, eps2=0.05)
+        if cfg.method == "fedas":
+            clients = pre_models
+        for r in range(n_rounds):
+            key, kb, kr = jax.random.split(key, 3)
+            batches = _sample_batches(kb, Xtr, Ytr, cfg.batch)
+            if cfg.method == "fedavg":
+                model = fedavg_round(model, batches, sizes, train_fn, kr,
+                                     local_steps=2)
+                stacked = jax.tree.map(
+                    lambda l: jnp.broadcast_to(l[None], (n_clients,) + l.shape),
+                    model)
+            elif cfg.method == "cfl":
+                st = cfl_round(st, batches, sizes, train_fn, kr, local_steps=2)
+                stacked = cfl_client_models(st, n_clients)
+            else:
+                model, clients = fedas_round(model, clients, batches, sizes,
+                                             train_fn, kr)
+                stacked = clients
+            if (r + 1) % max(cfg.eval_every // 10, 1) == 0:
+                acc = eval_fixed_models(stacked) if cfg.mode == "fixed" else \
+                    eval_mobile_models(stacked, np.arange(n_clients) % 8)
+                traces.append((r * 10, float(acc.mean())))
+        final_models = stacked
+
+    # ---------------- mobility-coupled methods -------------------------------
+    else:
+        fresh = (FreshnessConfig(init_threshold=1e9, warmup=10**9)
+                 if cfg.freshness_off else FreshnessConfig())
+        pcfg = PopulationConfig(
+            mode=cfg.mode, n_fixed=cfg.n_fixed, n_mules=cfg.n_mules,
+            gamma=cfg.gamma, freshness=fresh)
+        pop = init_population(jax.random.PRNGKey(cfg.seed), init, pcfg)
+        if cfg.mode == "fixed":
+            # fixed devices hold the pretrained models; each mule starts with
+            # a snapshot from its initial space (its user's 'home' space)
+            pop["fixed_models"] = pre_models
+            home = jnp.asarray(mule_area * 4 + mule_space, jnp.int32)
+            pop["mule_models"] = jax.tree.map(lambda l: l[home], pre_models)
+        else:
+            pop["mule_models"] = pre_models
+        step_pop = jax.jit(lambda s, i, b, k: population_step(
+            s, i, b, train_fn, pcfg, k))
+        jit_local = jax.jit(lambda m, b, k: local_step(m, b, train_fn, k))
+        jit_gossip = jax.jit(
+            lambda m, p, a, b, k: gossip_step(m, p, a, b, train_fn, k))
+        jit_oppcl = jax.jit(
+            lambda m, p, a, b, k: oppcl_step(m, p, a, b, train_fn, k))
+
+        last_fid = jnp.zeros((cfg.n_mules,), jnp.int32)
+        for t, (fid, exch, pos, area) in enumerate(stream_fn()):
+            key, kb, ks = jax.random.split(key, 3)
+            last_fid = jnp.where(fid >= 0, fid, last_fid)
+            if cfg.mode == "fixed":
+                batches = {"fixed": _sample_batches(kb, Xtr, Ytr, cfg.batch),
+                           "mule": None}
+            else:
+                batches = {"fixed": None,
+                           "mule": _sample_batches(kb, Xtr, Ytr, cfg.batch)}
+            if cfg.method == "local":
+                if cfg.mode == "fixed":
+                    pop["fixed_models"] = jit_local(
+                        pop["fixed_models"],
+                        _sample_batches(kb, Xtr, Ytr, cfg.batch), ks)
+                else:
+                    pop["mule_models"] = jit_local(
+                        pop["mule_models"], batches["mule"], ks)
+            elif cfg.method == "gossip":
+                # peer exchange also costs 3 time steps (paper Sec 4.3.1)
+                if t % 3 == 2:
+                    pop["mule_models"] = jit_gossip(pop["mule_models"], pos,
+                                                    area, batches["mule"], ks)
+            elif cfg.method == "oppcl":
+                if t % 3 == 2:
+                    pop["mule_models"] = jit_oppcl(pop["mule_models"], pos,
+                                                   area, batches["mule"], ks)
+            elif cfg.method in ("mlmule", "mlmule+gossip"):
+                info = {"fixed_id": fid, "exchange": exch}
+                pop = step_pop(pop, info, batches, ks)
+                if cfg.method == "mlmule+gossip" and t % 3 == 2:
+                    key, kg = jax.random.split(key)
+                    pop["mule_models"] = jit_gossip(
+                        pop["mule_models"], pos, area, batches["mule"], kg)
+            else:
+                raise ValueError(cfg.method)
+
+            if (t + 1) % cfg.eval_every == 0:
+                if cfg.mode == "fixed":
+                    acc = eval_fixed_models(pop["fixed_models"])
+                else:
+                    acc = eval_mobile_models(pop["mule_models"], last_fid)
+                traces.append((t, float(acc.mean())))
+        final_models = (pop["fixed_models"] if cfg.mode == "fixed"
+                        else pop["mule_models"])
+
+    # ---------------- final metrics (pre/post local) --------------------------
+    if cfg.mode == "fixed":
+        pre = eval_fixed_models(final_models)
+        post_models = final_models
+        for _ in range(cfg.post_local_epochs):
+            key, kb, kt = jax.random.split(key, 3)
+            batches = _sample_batches(kb, Xtr, Ytr, cfg.batch)
+            keys = jax.random.split(kt, n_clients)
+            post_models = jax.vmap(train_fn)(post_models, batches, keys)
+        post = eval_fixed_models(post_models)
+    else:
+        pre = eval_mobile_models(final_models, last_fid if cfg.method not in
+                                 ("fedavg", "cfl", "fedas") else
+                                 np.arange(n_clients) % 8)
+        post = pre
+
+    return {
+        "config": dataclasses.asdict(cfg),
+        "trace": traces,
+        "pre_local_acc": float(np.mean(pre)),
+        "post_local_acc": float(np.mean(post)),
+        "wall_s": time.time() - t_start,
+    }

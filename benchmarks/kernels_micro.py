@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks: us/call for each Pallas kernel's oracle + interpret
+paths at several shapes (wall-clock is CPU; the numbers track relative block
+configurations, not TPU latency)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.mule_agg.ops import mule_agg
+from repro.kernels.ssm_scan.ops import ssd_scan
+
+
+def _time(fn, *args, n=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    k = jax.random.PRNGKey(0)
+    # flash attention
+    for (b, s, h, kv, d) in [(1, 512, 8, 2, 64), (1, 2048, 8, 2, 64)]:
+        q = jax.random.normal(k, (b, s, h, d), jnp.float32)
+        kk = jax.random.normal(k, (b, s, kv, d), jnp.float32)
+        v = jax.random.normal(k, (b, s, kv, d), jnp.float32)
+        us = _time(lambda: flash_attention(q, kk, v, backend="ref"))
+        rows.append((f"flash.ref.s{s}", us, f"{4*s*s*h*d*b/1e9:.2f} GFLOP"))
+    # ssd scan
+    for (b, s, h, p, n) in [(1, 1024, 8, 64, 64)]:
+        x = jax.random.normal(k, (b, s, h, p))
+        dt = jax.nn.softplus(jax.random.normal(k, (b, s, h)))
+        A = -jnp.exp(jax.random.normal(k, (h,)))
+        B = jax.random.normal(k, (b, s, n))
+        C = jax.random.normal(k, (b, s, n))
+        us = _time(lambda: ssd_scan(x, dt, A, B, C, backend="ref")[0])
+        rows.append((f"ssd.ref.s{s}", us, "chunk=64"))
+    # mule_agg
+    for (f, m, d) in [(8, 64, 1 << 18)]:
+        assign = jax.random.uniform(k, (f, m))
+        w = jax.random.normal(k, (m, d))
+        us = _time(lambda: mule_agg(assign, w, backend="ref"))
+        rows.append((f"mule_agg.ref.d{d}", us, f"{m*d*4/1e6:.0f}MB read"))
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

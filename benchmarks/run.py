@@ -1,0 +1,55 @@
+"""Benchmark suite entry: one benchmark per paper table/figure.
+
+``python -m benchmarks.run [--full] [--only table1,fig6,...]``
+prints ``name,us_per_call(or metric),derived`` CSV lines per benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: kernels,proto,table1,fig6,fig8")
+    ap.add_argument("--outdir", default="benchmarks/results")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else [
+        "kernels", "proto", "table1", "fig6", "fig8"]
+    os.makedirs(args.outdir, exist_ok=True)
+    results = {}
+
+    print("name,value,derived")
+    if "kernels" in only:
+        from benchmarks import kernels_micro
+        results["kernels"] = kernels_micro.run()
+    if "proto" in only:
+        from benchmarks import prototype_timing
+        results["proto"] = prototype_timing.run()
+    if "table1" in only:
+        from benchmarks import table1_fixed_training
+        t0 = time.time()
+        results["table1"] = table1_fixed_training.run(full=args.full)
+        print(f"table1.wall_s,{time.time()-t0:.1f},")
+    if "fig6" in only:
+        from benchmarks import fig6_mobile_cifar
+        t0 = time.time()
+        results["fig6"] = fig6_mobile_cifar.run(full=args.full)
+        print(f"fig6.wall_s,{time.time()-t0:.1f},")
+    if "fig8" in only:
+        from benchmarks import fig8_mobile_har
+        t0 = time.time()
+        results["fig8"] = fig8_mobile_har.run(full=args.full)
+        print(f"fig8.wall_s,{time.time()-t0:.1f},")
+
+    with open(os.path.join(args.outdir, "bench_results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

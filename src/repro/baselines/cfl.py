@@ -1,0 +1,101 @@
+"""Clustered Federated Learning (Sattler et al. 2019).
+
+Recursive bipartitioning: when the global objective stagnates (mean client
+update norm below eps1) but some client still moves (max norm above eps2),
+the cluster is split into two groups by the sign structure of pairwise
+cosine similarities between client updates; each cluster then runs FedAvg
+independently. The cluster bookkeeping runs on host (numpy) between rounds,
+as in practical CFL implementations; the training/aggregation math is JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_average
+
+
+@dataclasses.dataclass
+class CFLState:
+    clusters: List[np.ndarray]        # list of client-index arrays
+    models: List[Any]                 # one model per cluster
+    eps1: float = 0.05                # stagnation norm
+    eps2: float = 0.4                 # max-client norm to trigger split
+    min_cluster: int = 2
+
+
+def _flat(tree) -> jnp.ndarray:
+    return jnp.concatenate([l.reshape(-1) for l in jax.tree.leaves(tree)])
+
+
+def _bipartition(sim: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Split clients into two groups maximizing intra-group cosine sim
+    (greedy spectral-sign heuristic on the similarity matrix)."""
+    w, v = np.linalg.eigh(sim)
+    lead = v[:, -1]
+    g1 = np.where(lead >= np.median(lead))[0]
+    g2 = np.where(lead < np.median(lead))[0]
+    if len(g1) == 0 or len(g2) == 0:  # degenerate; split by half
+        order = np.argsort(lead)
+        g1, g2 = order[: len(order) // 2], order[len(order) // 2:]
+    return g1, g2
+
+
+def cfl_round(state: CFLState, client_batches: Any, client_sizes: jnp.ndarray,
+              train_fn: Callable, key, local_steps: int = 1) -> CFLState:
+    """One communication round over all clusters, with split checks."""
+    new_clusters: List[np.ndarray] = []
+    new_models: List[Any] = []
+    for ci, (idx, model) in enumerate(zip(state.clusters, state.models)):
+        take = lambda l: l[jnp.asarray(idx)]
+        batches_c = jax.tree.map(take, client_batches)
+        sizes_c = client_sizes[jnp.asarray(idx)]
+        n = len(idx)
+        bcast = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), model)
+
+        def local(params, batch, k):
+            def body(i, p):
+                return train_fn(p, batch, jax.random.fold_in(k, i))
+            return jax.lax.fori_loop(0, local_steps, body, params)
+
+        keys = jax.random.split(jax.random.fold_in(key, ci), n)
+        locals_ = jax.vmap(local)(bcast, batches_c, keys)
+        # client updates
+        upd = jax.tree.map(lambda loc, g: loc - g[None], locals_, model)
+        flat_upd = jax.vmap(_flat)(upd)                          # [n, D]
+        norms = np.asarray(jnp.linalg.norm(flat_upd, axis=1))
+        mean_norm = float(jnp.linalg.norm(jnp.mean(flat_upd, axis=0)))
+        agg = weighted_average(locals_, sizes_c.astype(jnp.float32))
+
+        do_split = (mean_norm < state.eps1 and norms.max() > state.eps2
+                    and n >= 2 * state.min_cluster)
+        if do_split:
+            fu = np.asarray(flat_upd)
+            nrm = np.linalg.norm(fu, axis=1, keepdims=True) + 1e-9
+            sim = (fu / nrm) @ (fu / nrm).T
+            g1, g2 = _bipartition(sim)
+            if len(g1) >= state.min_cluster and len(g2) >= state.min_cluster:
+                for g in (g1, g2):
+                    sub = jnp.asarray(g)
+                    sub_model = weighted_average(
+                        jax.tree.map(lambda l: l[sub], locals_),
+                        sizes_c[sub].astype(jnp.float32))
+                    new_clusters.append(idx[g])
+                    new_models.append(sub_model)
+                continue
+        new_clusters.append(idx)
+        new_models.append(agg)
+    return dataclasses.replace(state, clusters=new_clusters, models=new_models)
+
+
+def cfl_client_models(state: CFLState, n_clients: int) -> Any:
+    """Stacked [C, ...] view: each client gets its cluster's model."""
+    order = np.zeros(n_clients, np.int64)
+    for ci, idx in enumerate(state.clusters):
+        order[idx] = ci
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *state.models)
+    return jax.tree.map(lambda l: l[jnp.asarray(order)], stacked)

@@ -1,0 +1,81 @@
+"""FedAS (Yang et al., CVPR 2024) — simplified faithful core.
+
+FedAS bridges inconsistency in personalized FL with two mechanisms:
+(1) **federated parameter alignment** — before local training, the client's
+    *shared* parameters are re-aligned to the server state so stale personal
+    models don't drag the aggregate; personal (classifier) parameters never
+    leave the device;
+(2) **client-synchronized aggregation weights** — aggregation weighted by
+    how in-sync a client's shared update is (we use cosine similarity to the
+    mean update as the sync score).
+
+``shared_predicate(path)`` decides which leaves are shared (default:
+everything except leaves whose path contains "fc2"/"head" — task classifier).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import weighted_average
+
+
+def default_shared_predicate(path: str) -> bool:
+    return not any(k in path for k in ("fc2", "head"))
+
+
+def _split(tree: Any, pred: Callable[[str], bool]):
+    """Returns masks pytree (1.0 shared / 0.0 personal) matching tree."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def mask_of(path_leaf):
+        path, leaf = path_leaf
+        name = "/".join(str(p) for p in path)
+        return jnp.full_like(leaf, 1.0 if pred(name) else 0.0)
+
+    masks = [mask_of(pl) for pl in flat]
+    treedef = jax.tree.structure(tree)
+    return jax.tree.unflatten(treedef, masks)
+
+
+def fedas_round(global_shared: Any, client_models: Any, client_batches: Any,
+                client_sizes: jnp.ndarray, train_fn: Callable, key,
+                shared_pred: Callable[[str], bool] = default_shared_predicate,
+                local_steps: int = 1):
+    """Returns (new_global_shared, new_client_models).
+
+    client_models: stacked [C, ...] personalized models (clients keep their
+    personal parts across rounds).
+    """
+    n = client_sizes.shape[0]
+    mask = _split(global_shared, shared_pred)
+
+    # (1) alignment: overwrite each client's shared part with the server's
+    aligned = jax.tree.map(
+        lambda cm, g, m: cm * (1 - m[None]) + jnp.broadcast_to(g[None], cm.shape) * m[None],
+        client_models, global_shared, mask)
+
+    def local(params, batch, k):
+        def body(i, p):
+            return train_fn(p, batch, jax.random.fold_in(k, i))
+        return jax.lax.fori_loop(0, local_steps, body, params)
+
+    keys = jax.random.split(key, n)
+    trained = jax.vmap(local)(aligned, client_batches, keys)
+
+    # (2) sync-scored aggregation of the shared part
+    upd = jax.tree.map(lambda tr, al: (tr - al), trained, aligned)
+    flat = jax.vmap(lambda u: jnp.concatenate(
+        [l.reshape(-1) for l in jax.tree.leaves(u)]))(upd)       # [C, D]
+    mean_u = jnp.mean(flat, axis=0, keepdims=True)
+    cos = jnp.sum(flat * mean_u, axis=1) / (
+        jnp.linalg.norm(flat, axis=1) * jnp.linalg.norm(mean_u) + 1e-9)
+    sync_w = jax.nn.relu(cos) + 1e-3
+    weights = client_sizes.astype(jnp.float32) * sync_w
+    new_global = weighted_average(trained, weights)
+    # personal parts stay local:
+    new_global = jax.tree.map(lambda g, old, m: g * m + old * (1 - m),
+                              new_global, global_shared, mask)
+    return new_global, trained

@@ -1,0 +1,30 @@
+"""FedAvg (McMahan et al. 2017): server round = broadcast, local train,
+weighted average by client data size."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import weighted_average
+
+
+def fedavg_round(global_model: Any, client_batches: Any, client_sizes: jnp.ndarray,
+                 train_fn: Callable, key, local_steps: int = 1) -> Any:
+    """client_batches: stacked [C, steps?, B, ...] consumed by train_fn.
+
+    train_fn(params, batch, key) -> params; applied ``local_steps`` times.
+    """
+    n_clients = client_sizes.shape[0]
+    bcast = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (n_clients,) + l.shape), global_model)
+
+    def local(params, batch, k):
+        def body(i, p):
+            return train_fn(p, batch, jax.random.fold_in(k, i))
+        return jax.lax.fori_loop(0, local_steps, body, params)
+
+    keys = jax.random.split(key, n_clients)
+    locals_ = jax.vmap(local)(bcast, client_batches, keys)
+    return weighted_average(locals_, client_sizes.astype(jnp.float32))

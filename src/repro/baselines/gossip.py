@@ -1,0 +1,35 @@
+"""Gossip Learning (Hegedűs et al. 2019).
+
+Per encounter: exchange-aggregate-train. Mobile devices within
+``radius`` of each other in the same area exchange models, average with all
+neighbors (masked row-normalized mixing), then train one local step.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import batched_mix, masked_group_mean
+
+
+def encounter_matrix(pos: jnp.ndarray, area: jnp.ndarray, radius: float) -> jnp.ndarray:
+    """pos [M,2], area [M] -> symmetric bool [M,M] (no self)."""
+    d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
+    same_area = area[:, None] == area[None, :]
+    enc = (d2 <= radius ** 2) & same_area
+    return enc & ~jnp.eye(pos.shape[0], dtype=bool)
+
+
+def gossip_step(models: Any, pos: jnp.ndarray, area: jnp.ndarray,
+                batches: Any, train_fn: Callable, key, *,
+                radius: float = 0.15, gamma: float = 0.5) -> Any:
+    enc = encounter_matrix(pos, area, radius).astype(jnp.float32)   # [M, M]
+    neigh_mean, mass = masked_group_mean(models, enc)
+    met = (mass > 0).astype(jnp.float32)
+    models = batched_mix(models, neigh_mean, gamma * met)           # aggregate
+    n = mass.shape[0]
+    keys = jax.random.split(key, n)
+    trained = jax.vmap(train_fn)(models, batches, keys)             # train
+    return batched_mix(models, trained, met)                        # only on encounter

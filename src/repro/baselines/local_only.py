@@ -1,0 +1,13 @@
+"""Local-only: every device trains on its own data; no communication."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def local_step(models: Any, batches: Any, train_fn: Callable, key) -> Any:
+    """models: stacked [P, ...]; batches: [P, B, ...]."""
+    n = jax.tree.leaves(models)[0].shape[0]
+    keys = jax.random.split(key, n)
+    return jax.vmap(train_fn)(models, batches, keys)

@@ -1,0 +1,36 @@
+"""Opportunistic Collaborative Learning (Lee et al. 2021).
+
+Egocentric cycle per encounter: exchange - train - exchange - aggregate.
+Device i sends its model to an encountered peer j; j trains i's model on
+j's local data and returns it; i aggregates the returned model with its own.
+Vectorized simplification (documented): each device picks its nearest
+neighbor as the peer for the step.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines.gossip import encounter_matrix
+from repro.core.aggregation import batched_mix
+
+
+def oppcl_step(models: Any, pos: jnp.ndarray, area: jnp.ndarray,
+               batches: Any, train_fn: Callable, key, *,
+               radius: float = 0.15, gamma: float = 0.5) -> Any:
+    m = pos.shape[0]
+    enc = encounter_matrix(pos, area, radius)
+    d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
+    d2 = jnp.where(enc, d2, jnp.inf)
+    peer = jnp.argmin(d2, axis=1)                                  # [M]
+    met = jnp.isfinite(jnp.min(d2, axis=1)).astype(jnp.float32)
+
+    # peer j trains i's model on j's data (exchange-train)
+    my_model_at_peer = models                                      # i's model ...
+    peer_batches = jax.tree.map(lambda l: l[peer], batches)        # ... j's data
+    keys = jax.random.split(key, m)
+    trained = jax.vmap(train_fn)(my_model_at_peer, peer_batches, keys)
+    # (exchange back - aggregate)
+    return batched_mix(models, trained, gamma * met)

@@ -1,0 +1,63 @@
+"""Pytree checkpointing: flattened leaves -> npz + json metadata.
+
+Checkpoints carry ML Mule lineage metadata (model last-update timestamps)
+so the freshness filter survives restarts — a mule that reboots still knows
+how stale its snapshot is.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _paths(tree) -> Dict[str, Any]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+        out[name] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    metadata: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez(path, **_paths(tree))
+    meta = dict(metadata or {})
+    meta["step"] = step
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f, indent=2, default=float)
+    return path
+
+
+def restore_checkpoint(path: str, template: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``template`` (shape-checked)."""
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        name = "/".join(re.sub(r"[\[\]'\.]", "", str(x)) for x in p)
+        arr = data[name]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {name}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    meta = {}
+    meta_path = path + ".json"
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+    return jax.tree_util.tree_unflatten(jax.tree.structure(template), leaves), meta
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(p for p in os.listdir(directory)
+                   if p.startswith("ckpt_") and p.endswith(".npz"))
+    return os.path.join(directory, ckpts[-1]) if ckpts else None

@@ -1,0 +1,17 @@
+"""ML Mule core: the paper's contribution as composable JAX modules.
+
+- ``aggregation``  — dwell-weighted model averaging (population-scale masked
+                     segment reduce; Pallas ``mule_agg`` kernel underneath).
+- ``freshness``    — the dynamic staleness threshold
+                     T <- (1-a)T + a(median(L) + b*MAD(L)).
+- ``protocol``     — the In-House phase cycles (fixed-device training:
+                     share-aggregate-train-share; mobile-device training:
+                     share-aggregate-share-train) and the Mule phase.
+- ``population``   — vectorized multi-device simulation engine (stacked
+                     pytrees; jittable steps).
+- ``distributed``  — shard_map population engine: mules sharded over the
+                     ``data`` mesh axis, areas mapped to pods.
+"""
+from repro.core.aggregation import masked_group_mean, pairwise_mix, weighted_average  # noqa: F401
+from repro.core.freshness import FreshnessConfig, init_freshness, push_and_update  # noqa: F401
+from repro.core.population import PopulationConfig, init_population, population_step  # noqa: F401

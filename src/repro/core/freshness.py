@@ -1,0 +1,98 @@
+"""The paper's model-freshness filter (Sec 3.1).
+
+Each fixed device f keeps a history L of the *ages* of models it has
+received (age = now - model's last update time) and a dynamic threshold
+
+    T_{t+1} = (1 - alpha) T_t + alpha * ( median(L) + beta * MAD(L) )
+
+where MAD is the median absolute deviation. An incoming model is accepted
+iff its age <= T (devices in warmup accept everything).
+
+The paper does not give alpha/beta values; defaults alpha=0.1, beta=1.0 are
+our documented assumption. History is a fixed ring buffer per device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(1e30)
+
+
+@dataclasses.dataclass(frozen=True)
+class FreshnessConfig:
+    alpha: float = 0.1
+    beta: float = 1.0
+    history: int = 16         # ring buffer length K
+    warmup: int = 4           # accept-all until this many receipts
+    init_threshold: float = 1e6
+
+
+def init_freshness(n_fixed: int, cfg: FreshnessConfig):
+    return {
+        "ages": jnp.full((n_fixed, cfg.history), INF),     # ring buffer of ages
+        "count": jnp.zeros((n_fixed,), jnp.int32),
+        "threshold": jnp.full((n_fixed,), cfg.init_threshold, jnp.float32),
+    }
+
+
+def accept_mask(state, fixed_ids: jnp.ndarray, ages: jnp.ndarray,
+                cfg: FreshnessConfig) -> jnp.ndarray:
+    """fixed_ids: [M] target device per mule (-1 = none); ages: [M]."""
+    fid = jnp.maximum(fixed_ids, 0)
+    thr = state["threshold"][fid]
+    warm = state["count"][fid] < cfg.warmup
+    return (fixed_ids >= 0) & (warm | (ages <= thr))
+
+
+def _masked_median(vals: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Median over valid entries of each row (midpoint for even counts)."""
+    filled = jnp.where(valid, vals, INF)
+    srt = jnp.sort(filled, axis=-1)
+    n = jnp.sum(valid, axis=-1)                           # [F]
+    lo = jnp.maximum(n - 1, 0) // 2
+    hi = jnp.maximum(n, 1) // 2
+    vlo = jnp.take_along_axis(srt, lo[:, None], axis=-1)[:, 0]
+    vhi = jnp.take_along_axis(srt, hi[:, None], axis=-1)[:, 0]
+    return 0.5 * (vlo + vhi)
+
+
+def push_and_update(state, fixed_ids: jnp.ndarray, ages: jnp.ndarray,
+                    deliver: jnp.ndarray, cfg: FreshnessConfig):
+    """Push delivered ages into per-device rings, then update thresholds.
+
+    fixed_ids/ages/deliver: [M] per-mule target, age, delivering-this-step.
+    Sequential scan over mules keeps the ring semantics exact for multiple
+    deliveries to one device in the same step.
+    """
+    def push(carry, inp):
+        ages_buf, count = carry
+        fid, age, dlv = inp
+
+        def do(args):
+            ages_buf, count = args
+            f = jnp.maximum(fid, 0)
+            slot = count[f] % cfg.history
+            ages_buf = ages_buf.at[f, slot].set(age)
+            count = count.at[f].add(1)
+            return ages_buf, count
+
+        carry = jax.lax.cond(dlv & (fid >= 0), do, lambda a: a, (ages_buf, count))
+        return carry, None
+
+    (ages_buf, count), _ = jax.lax.scan(
+        push, (state["ages"], state["count"]),
+        (fixed_ids, ages.astype(jnp.float32), deliver))
+
+    valid = ages_buf < INF
+    med = _masked_median(ages_buf, valid)
+    mad = _masked_median(jnp.abs(ages_buf - med[:, None]), valid)
+    target = med + cfg.beta * mad
+    any_hist = jnp.any(valid, axis=-1)
+    new_thr = jnp.where(
+        any_hist,
+        (1 - cfg.alpha) * state["threshold"] + cfg.alpha * target,
+        state["threshold"])
+    return {"ages": ages_buf, "count": count, "threshold": new_thr}

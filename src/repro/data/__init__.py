@@ -1,0 +1,4 @@
+from repro.data.partition import (  # noqa: F401
+    dirichlet_partition, iid_partition, shards_partition)
+from repro.data.synthetic import (  # noqa: F401
+    make_image_dataset, make_imu_dataset, make_lm_dataset)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots, each with a pure-jnp oracle.
+
+- ``mule_agg``        — fused dwell-weighted population aggregation (the ML
+                        Mule aggregation step at population scale; memory-bound).
+- ``flash_attention`` — blockwise causal/windowed GQA attention (train/prefill
+                        hot spot of the assigned transformer archs).
+- ``ssm_scan``        — chunked Mamba2/SSD selective-state-space scan (zamba2).
+
+Layout per kernel: ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd dispatching wrapper), ``ref.py`` (pure-jnp oracle). Kernels target TPU
+(MXU-aligned blocks, VMEM tiling) and are validated on CPU via interpret=True.
+"""

@@ -1,0 +1,33 @@
+"""Dispatching wrapper for blockwise GQA attention.
+
+``backend``:
+- ``"ref"``     — chunked pure-jnp flash (the CPU / dry-run compile path).
+- ``"pallas"``  — the TPU kernel (interpret=False; real hardware).
+- ``"interpret"`` — the TPU kernel executed by the Pallas interpreter on CPU
+  (correctness validation in this container).
+- ``"auto"``    — pallas on TPU backends, ref elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_reference, mha_reference  # noqa: F401
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: Optional[float] = None, backend: str = "ref"):
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return flash_reference(q, k, v, causal=causal, window=window,
+                               block_q=max(block_q, 256), block_k=max(block_k, 256),
+                               scale=scale)
+    if backend in ("pallas", "interpret"):
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, block_q=block_q,
+            block_k=block_k, scale=scale, interpret=(backend == "interpret"))
+    raise ValueError(f"unknown backend {backend!r}")

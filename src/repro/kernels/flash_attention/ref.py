@@ -1,0 +1,272 @@
+"""Pure-jnp oracles for blockwise GQA attention.
+
+Two references:
+
+- ``mha_reference`` — direct softmax(QK^T)V with full score materialization.
+  The ground-truth oracle for kernel tests; only safe at small S.
+- ``flash_reference`` — chunked running-softmax (flash-style) in pure jnp,
+  memory-bounded; the production CPU/compile path used by the model zoo and
+  the dry-run. Supports causal masking, sliding windows and GQA without
+  materializing [S, S] scores or repeated KV heads.
+
+Shapes: q [B, S, H, D]; k, v [B, S, KV, D] with H % KV == 0.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group(q, n_kv):
+    """[B,S,H,D] -> [B,S,KV,G,D]."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                  scale: Optional[float] = None):
+    b, sq, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = _group(q, n_kv).astype(jnp.float32)
+    scores = jnp.einsum("bikgd,bjkd->bkgij", qg * scale, k.astype(jnp.float32))
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned q positions
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgij,bjkd->bikgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _band_range(qi, block_q, block_k, window, sk, q_off):
+    """Static-length contiguous KV range covering the sliding-window band."""
+    span = ((window + block_k - 1) // block_k) * block_k + block_q
+    span = min(span, ((sk + block_k - 1) // block_k) * block_k)
+    start = jnp.clip(qi * block_q + q_off + block_q - span, 0, max(sk - span, 0))
+    return start, span
+
+
+def _fwd_impl(q, k, v, causal, window, block_q, block_k, scale):
+    """Returns (out [B,S,H,D], m, l stats [B,nq*Bq,KV,G])."""
+    b, s, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = h // n_kv
+    nq = -(-s // block_q)
+    pad_q = nq * block_q - s
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    qg = _group(qp, n_kv).reshape(b, nq, block_q, n_kv, g, d)
+    q_off = sk - s
+
+    nk = -(-sk // block_k)
+    pad_k = nk * block_k - sk
+    k_pad = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    v_pad = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+
+    def one_q_block(qi, q_blk):
+        q32 = q_blk.astype(jnp.float32) * scale
+        qpos = qi * block_q + jnp.arange(block_q) + q_off
+
+        if window is not None:
+            start, span = _band_range(qi, block_q, block_k, window, sk, q_off)
+            k_rng = jax.lax.dynamic_slice_in_dim(k_pad, start, span, axis=1)
+            v_rng = jax.lax.dynamic_slice_in_dim(v_pad, start, span, axis=1)
+            kpos = start + jnp.arange(span)
+            valid = (kpos[None, :] <= qpos[:, None]) \
+                & (kpos[None, :] > qpos[:, None] - window) & (kpos < sk)[None, :]
+            sc = jnp.einsum("bikgd,bjkd->bkgij", q32, k_rng.astype(jnp.float32))
+            sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+            m = jnp.max(sc, axis=-1, keepdims=True)
+            p = jnp.exp(sc - m)
+            l = jnp.sum(p, axis=-1, keepdims=True)
+            o = jnp.einsum("bkgij,bjkd->bikgd", p / jnp.maximum(l, 1e-30),
+                           v_rng.astype(jnp.float32))
+            ml = jnp.moveaxis(m[..., 0], -1, 1)      # [B, Bq, KV, G]
+            ll = jnp.moveaxis(l[..., 0], -1, 1)
+            return o, ml, ll
+
+        def kv_step(carry, kj):
+            m_prev, l_prev, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k_pad, kj * block_k, block_k, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v_pad, kj * block_k, block_k, axis=1)
+            kpos = kj * block_k + jnp.arange(block_k)
+            valid = (kpos < sk)[None, :] * jnp.ones((block_q, 1), bool)
+            if causal:
+                valid &= kpos[None, :] <= qpos[:, None]
+            sc = jnp.einsum("bikgd,bjkd->bkgij", q32, k_blk.astype(jnp.float32))
+            sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1, keepdims=True))
+            p = jnp.exp(sc - m_new)
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+            corr_b = jnp.moveaxis(corr[..., 0], -1, 1)[..., None]
+            acc = acc * corr_b + jnp.moveaxis(
+                jnp.einsum("bkgij,bjkd->bkgid", p, v_blk.astype(jnp.float32)), 3, 1)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, n_kv, g, block_q, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, block_q, 1), jnp.float32)
+        acc0 = jnp.zeros((b, block_q, n_kv, g, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, acc0), jnp.arange(nk))
+        l_b = jnp.moveaxis(l[..., 0], -1, 1)[..., None]
+        o = acc / jnp.maximum(l_b, 1e-30)
+        return o, jnp.moveaxis(m[..., 0], -1, 1), jnp.moveaxis(l[..., 0], -1, 1)
+
+    def scan_body(_, xs):
+        return None, one_q_block(*xs)
+
+    _, (out, ms, ls) = jax.lax.scan(scan_body, None,
+                                    (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * block_q, h, d)
+    ms = jnp.moveaxis(ms, 0, 1).reshape(b, nq * block_q, n_kv, g)
+    ls = jnp.moveaxis(ls, 0, 1).reshape(b, nq * block_q, n_kv, g)
+    return out[:, :s].astype(q.dtype), ms[:, :s], ls[:, :s]
+
+
+def _bwd_impl(q, k, v, out, ms, ls, dout, causal, window, block_q, block_k, scale):
+    """Flash-style two-pass backward; O(S·d) live memory, recomputes scores."""
+    b, s, h, d = q.shape
+    _, sk, n_kv, _ = k.shape
+    g = h // n_kv
+    nq = -(-s // block_q)
+    pad_q = nq * block_q - s
+    q_off = sk - s
+    nk = -(-sk // block_k)
+    pad_k = nk * block_k - sk
+
+    def padq(t):
+        return jnp.pad(t, ((0, 0), (0, pad_q)) + ((0, 0),) * (t.ndim - 2)) if pad_q else t
+
+    def padk(t):
+        return jnp.pad(t, ((0, 0), (0, pad_k)) + ((0, 0),) * (t.ndim - 2)) if pad_k else t
+
+    qg = _group(padq(q), n_kv).reshape(b, nq, block_q, n_kv, g, d).astype(jnp.float32)
+    dog = _group(padq(dout.astype(jnp.float32)), n_kv).reshape(b, nq, block_q, n_kv, g, d)
+    og = _group(padq(out.astype(jnp.float32)), n_kv).reshape(b, nq, block_q, n_kv, g, d)
+    msr = padq(ms).reshape(b, nq, block_q, n_kv, g)
+    lsr = padq(ls).reshape(b, nq, block_q, n_kv, g)
+    delta = jnp.sum(dog * og, axis=-1)                        # [B,nq,Bq,KV,G]
+    kr = padk(k).astype(jnp.float32)
+    vr = padk(v).astype(jnp.float32)
+
+    def scores(qi, kj_start, span_k):
+        """Recompute normalized p for q block qi vs KV range. -> [B,KV,G,Bq,span]"""
+        q_blk = qg[:, qi] * scale
+        k_rng = jax.lax.dynamic_slice_in_dim(kr, kj_start, span_k, axis=1)
+        qpos = qi * block_q + jnp.arange(block_q) + q_off
+        kpos = kj_start + jnp.arange(span_k)
+        valid = (kpos[None, :] <= qpos[:, None]) if causal else \
+            jnp.ones((block_q, span_k), bool)
+        if window is not None:
+            valid &= kpos[None, :] > qpos[:, None] - window
+        valid &= (kpos < sk)[None, :]
+        sc = jnp.einsum("bikgd,bjkd->bkgij", q_blk, k_rng)
+        sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+        m_i = jnp.moveaxis(msr[:, qi], 1, -1)[..., None]      # [B,KV,G,Bq,1]
+        l_i = jnp.moveaxis(lsr[:, qi], 1, -1)[..., None]
+        p = jnp.exp(sc - m_i) / jnp.maximum(l_i, 1e-30)
+        return p, k_rng, valid
+
+    def ds_of(qi, p, v_rng):
+        dP = jnp.einsum("bikgd,bjkd->bkgij", dog[:, qi], v_rng)
+        dl = jnp.moveaxis(delta[:, qi], 1, -1)[..., None]     # [B,KV,G,Bq,1]
+        return p * (dP - dl)
+
+    # ---- pass 1: dQ per q block ------------------------------------------------
+    def dq_block(qi):
+        if window is not None:
+            start, span = _band_range(qi, block_q, block_k, window, sk, q_off)
+            p, k_rng, _ = scores(qi, start, span)
+            v_rng = jax.lax.dynamic_slice_in_dim(vr, start, span, axis=1)
+            dS = ds_of(qi, p, v_rng)
+            return jnp.einsum("bkgij,bjkd->bikgd", dS, k_rng) * scale
+
+        def kv_step(dq, kj):
+            p, k_rng, _ = scores(qi, kj * block_k, block_k)
+            v_rng = jax.lax.dynamic_slice_in_dim(vr, kj * block_k, block_k, axis=1)
+            dS = ds_of(qi, p, v_rng)
+            return dq + jnp.einsum("bkgij,bjkd->bikgd", dS, k_rng) * scale, None
+
+        hi = min(qi + 1, nk) if causal and q_off == 0 else nk
+        dq0 = jnp.zeros((b, block_q, n_kv, g, d), jnp.float32)
+        dq, _ = jax.lax.scan(kv_step, dq0, jnp.arange(hi))
+        return dq
+
+    dq = jnp.stack([dq_block(qi) for qi in range(nq)], axis=1)
+    dq = dq.reshape(b, nq * block_q, h, d)[:, :s].astype(q.dtype)
+
+    # ---- pass 2: dK, dV per kv block --------------------------------------------
+    def dkv_block(kj):
+        lo = kj if (causal and q_off == 0 and block_q == block_k) else 0
+        if window is not None:
+            # q blocks whose band includes kv block kj
+            lo = max(0, (kj * block_k - block_q - q_off) // block_q)
+        def q_step(carry, qi):
+            dk, dv = carry
+            p, _, _ = scores(qi, kj * block_k, block_k)
+            v_rng = jax.lax.dynamic_slice_in_dim(vr, kj * block_k, block_k, axis=1)
+            dS = ds_of(qi, p, v_rng)
+            dv = dv + jnp.einsum("bkgij,bikgd->bjkd", p, dog[:, qi])
+            dk = dk + jnp.einsum("bkgij,bikgd->bjkd", dS, qg[:, qi]) * scale
+            return (dk, dv), None
+
+        z = jnp.zeros((b, block_k, n_kv, d), jnp.float32)
+        hi = nq
+        if window is not None:
+            hi = min(nq, (kj * block_k + block_k + window) // block_q + 1)
+        (dk, dv), _ = jax.lax.scan(q_step, (z, z), jnp.arange(lo, hi))
+        return dk, dv
+
+    dks, dvs = zip(*[dkv_block(kj) for kj in range(nk)])
+    dk = jnp.concatenate(dks, axis=1)[:, :sk].astype(k.dtype)
+    dv = jnp.concatenate(dvs, axis=1)[:, :sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash_core(q, k, v, cfgt):
+    out, _, _ = _fwd_impl(q, k, v, *cfgt)
+    return out
+
+
+def _flash_core_fwd(q, k, v, cfgt):
+    out, ms, ls = _fwd_impl(q, k, v, *cfgt)
+    return out, (q, k, v, out, ms, ls)
+
+
+def _flash_core_bwd(cfgt, res, dout):
+    q, k, v, out, ms, ls = res
+    return _bwd_impl(q, k, v, out, ms, ls, dout, *cfgt)
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "scale"))
+def flash_reference(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    scale: Optional[float] = None):
+    """Chunked attention with running softmax; O(S·block) live memory in both
+    the forward AND the backward pass (custom VJP with flash-style two-pass
+    recompute — differentiating naively through the KV scan would store
+    O(S^2) residuals).
+
+    For ``window`` set, each query block only visits the contiguous KV range
+    covering its band — a real FLOP reduction (block-banded), not just a mask.
+    """
+    b, s, h, d = q.shape
+    _, sk, _, _ = k.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, sk)
+    return _flash_core(q, k, v, (causal, window, block_q, block_k, scale))

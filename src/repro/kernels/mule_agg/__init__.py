@@ -1,0 +1,1 @@
+from repro.kernels.mule_agg.ops import mule_agg  # noqa: F401

@@ -1,0 +1,17 @@
+"""Dispatching wrapper for the fused population aggregation."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.mule_agg.kernel import mule_agg_pallas
+from repro.kernels.mule_agg.ref import mule_agg_reference  # noqa: F401
+
+
+def mule_agg(assign, weights, *, block_d: int = 2048, backend: str = "auto",
+             interpret: bool | None = None):
+    """assign [F, M] x weights [M, D] -> [F, D]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if backend == "ref":
+        return mule_agg_reference(assign, weights)
+    return mule_agg_pallas(assign, weights, block_d=block_d, interpret=interpret)

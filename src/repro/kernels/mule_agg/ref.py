@@ -1,0 +1,15 @@
+"""Oracle for the fused population-aggregation kernel.
+
+out[f, d] = sum_m A[f, m] * W[m, d]
+
+A is the (freshness-filtered, dwell-normalized) assignment matrix
+[n_fixed, n_mules]; W is the population's flattened parameters
+[n_mules, n_params]. Memory-bound: every byte of W is read once.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mule_agg_reference(assign: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    return (assign.astype(jnp.float32) @ weights.astype(jnp.float32)).astype(weights.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.slstm_fused.ops import slstm_scan  # noqa: F401

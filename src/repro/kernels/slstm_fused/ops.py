@@ -1,0 +1,16 @@
+"""Dispatching wrapper for the fused sLSTM recurrence."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.slstm_fused.ref import slstm_reference  # noqa: F401
+
+
+def slstm_scan(pre, r, *, backend: str = "ref"):
+    """pre [B,S,4,H,P]; r [4,H,P,P] -> h [B,S,H,P]."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return slstm_reference(pre, r)[0]
+    from repro.kernels.slstm_fused.kernel import slstm_scan_pallas
+    return slstm_scan_pallas(pre, r, interpret=(backend == "interpret"))

@@ -1,0 +1,44 @@
+"""Oracle for the fused sLSTM recurrence.
+
+Inputs are the gate pre-activations (the parallel x @ W_in part is computed
+outside): z/i/f/o each [B, S, H, P], recurrent weights r [4, H, P, P].
+Stabilized exponential gating per the xLSTM paper (Sec 3.1):
+
+    m_t = max(logsig(f_pre) + m_{t-1}, i_pre)
+    i = exp(i_pre - m_t); f = exp(logsig(f_pre) + m_{t-1} - m_t)
+    c = f c + i tanh(z);  n = f n + i;  h = sigmoid(o) * c / max(n, eps)
+
+Returns h over time [B, S, H, P] and the final (h, c, n, m) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_reference(pre: jnp.ndarray, r: jnp.ndarray, state=None):
+    """pre: [B, S, 4, H, P] gate pre-activations (z,i,f,o); r: [4, H, P, P]."""
+    b, s, _, h, p = pre.shape
+    if state is None:
+        z = jnp.zeros((b, h, p), jnp.float32)
+        state = {"h": z, "c": z, "n": z, "m": jnp.full((b, h, p), -1e30)}
+
+    def rec(w, hp):
+        return jnp.einsum("bhp,hpq->bhq", hp, w)
+
+    def step(st, pre_t):
+        h_prev = st["h"]
+        z_pre = pre_t[:, 0] + rec(r[0], h_prev)
+        i_pre = pre_t[:, 1] + rec(r[1], h_prev)
+        f_pre = pre_t[:, 2] + rec(r[2], h_prev)
+        o_pre = pre_t[:, 3] + rec(r[3], h_prev)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_pre) + st["m"], i_pre)
+        i_act = jnp.exp(i_pre - m_new)
+        f_act = jnp.exp(jax.nn.log_sigmoid(f_pre) + st["m"] - m_new)
+        c = f_act * st["c"] + i_act * jnp.tanh(z_pre)
+        n = f_act * st["n"] + i_act
+        h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+        return {"h": h_new, "c": c, "n": n, "m": m_new}, h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre.astype(jnp.float32), 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state

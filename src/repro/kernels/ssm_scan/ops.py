@@ -1,0 +1,22 @@
+"""Dispatching wrapper for the Mamba2 SSD scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssm_scan.ref import ssd_chunked_reference, ssd_reference  # noqa: F401
+
+
+def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk: int = 64, init_state=None,
+             backend: str = "ref"):
+    """x [B,S,H,P]; dt [B,S,H]; A [H]; Bmat/Cmat [B,S,N] -> (y, final_state)."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return ssd_chunked_reference(x, dt, A, Bmat, Cmat, chunk=chunk,
+                                     init_state=init_state)
+    if backend in ("pallas", "interpret"):
+        from repro.kernels.ssm_scan.kernel import ssd_scan_pallas
+        return ssd_scan_pallas(x, dt, A, Bmat, Cmat, chunk=chunk,
+                               init_state=init_state,
+                               interpret=(backend == "interpret"))
+    raise ValueError(f"unknown backend {backend!r}")

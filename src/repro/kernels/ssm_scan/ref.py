@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space dual) scan.
+
+The recurrence (per batch b, head h):
+    s_i = dA_i * s_{i-1} + dt_i * x_i ⊗ B_i          s: [P, N]
+    y_i = C_i · s_i                                   y: [P]
+with dA_i = exp(dt_i * A_h), A_h < 0. B/C are shared across heads
+(multi-value attention analogue, Mamba2 Sec 7).
+
+- ``ssd_reference``  — direct sequential lax.scan over time (ground truth).
+- ``ssd_chunked_reference`` — chunked parallel form (intra-chunk quadratic
+  + inter-chunk state carry), the production CPU path; mathematically equal.
+
+Shapes: x [B, S, H, P]; dt [B, S, H]; A [H]; Bmat/Cmat [B, S, N].
+Returns y [B, S, H, P] and final state [B, H, P, N].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x, dt, A, Bmat, Cmat, init_state=None):
+    b, s, h, p = x.shape
+    n = Bmat.shape[-1]
+    dA = jnp.exp(dt * A[None, None, :])                      # [B,S,H]
+    dtx = dt[..., None] * x                                   # [B,S,H,P]
+    s0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None else init_state
+
+    def step(state, inp):
+        dA_t, dtx_t, B_t, C_t = inp
+        state = state * dA_t[..., None, None] + jnp.einsum("bhp,bn->bhpn", dtx_t, B_t)
+        y = jnp.einsum("bhpn,bn->bhp", state, C_t)
+        return state, y
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dtx, 1, 0),
+          jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0))
+    state, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_chunked_reference(x, dt, A, Bmat, Cmat, *, chunk: int = 64, init_state=None):
+    b, s, h, p = x.shape
+    n = Bmat.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    loga = (dt * A[None, None, :]).astype(jnp.float32)        # [B,S,H] (<= 0)
+    dtx = (dt[..., None] * x).astype(jnp.float32)             # [B,S,H,P]
+
+    def rc(t):  # reshape to chunks, time axis -> (nc, chunk)
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    la, dx = rc(loga), rc(dtx)
+    Bc, Cc = rc(Bmat.astype(jnp.float32)), rc(Cmat.astype(jnp.float32))
+    cum = jnp.cumsum(la, axis=2)                               # [B,nc,Q,H]
+
+    # intra-chunk: y[i] = sum_{j<=i} (C_i·B_j) exp(cum_i - cum_j) dtx_j
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # [B,nc,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: the upper triangle is exp(+large) = inf, and inf*0
+    # poisons gradients through the where
+    decay = jnp.where(mask[None, None, :, :, None], decay, -jnp.inf)
+    L = jnp.exp(decay)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                 # [B,nc,Qi,Qj]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, L, dx)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) dtx_j ⊗ B_j
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)                 # [B,nc,Q,H]
+    states = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", dec_end, dx, Bc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [B,nc,H]
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None else init_state.astype(jnp.float32)
+
+    def carry_fn(state, inp):
+        st_c, dec_c = inp                                      # [B,H,P,N], [B,H]
+        new = state * dec_c[..., None, None] + st_c
+        return new, state                                      # emit state BEFORE chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        carry_fn, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # [B,nc,H,P,N]
+
+    # inter-chunk: y[i] += exp(cum_i) * C_i · S_prev
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp", jnp.exp(cum), Cc, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, p)[:, :s]
+    return y.astype(x.dtype), final_state

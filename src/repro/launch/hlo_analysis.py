@@ -1,0 +1,286 @@
+"""Scan-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+scan-over-layers (or chunked-attention scan) model under-reports FLOPs,
+bytes and collective traffic by the trip count. This module re-derives the
+three roofline inputs from the compiled HLO text, walking the call graph and
+multiplying while bodies by their trip counts:
+
+- ``flops`` — 2 × result_elems × K for every dot (contracting dims parsed,
+  operand shapes resolved through a module-wide symbol table), plus convs;
+- ``bytes`` — per op: result bytes, plus operand bytes for dot/conv/
+  collectives/copies (a deliberate approximation of HloCostAnalysis
+  "bytes accessed": elementwise chains end up fused on real backends, and
+  the memory roofline is dominated by parameter reads + activation writes,
+  which this counts exactly);
+- ``coll`` — operand bytes per collective kind (all-gather, all-reduce,
+  reduce-scatter, all-to-all, collective-permute).
+
+Trip counts come from the largest integer constant in the loop-condition
+computation (exact for scan-lowered loops: ``counter < N``). Fusion ops are
+leaves; their called computations are not double counted. All values are
+per-device (input is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))"
+    r"[^\s]*\s+([\w\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+               "after-all", "iota"}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for d, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        if dims:
+            for x in dims.split(","):
+                n *= int(x)
+        total += n * _DTYPE_BYTES.get(d, 4)
+    return total
+
+
+def _shape_elems(txt: str) -> int:
+    m = _SHAPE_RE.search(txt)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for x in m.group(2).split(","):
+            n *= int(x)
+    return n
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    max_const: int = 0
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if cur is None:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if s == "}" or s.startswith("} "):
+            cur = None
+            continue
+        comps[cur].append(s)
+    return comps
+
+
+def _operand_names(rhs: str) -> List[str]:
+    paren = rhs.find("(")
+    if paren < 0:
+        return []
+    depth, end = 0, len(rhs)
+    for i in range(paren, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = rhs[paren + 1:end]
+    return re.findall(r"%([\w.\-]+)", inner)
+
+
+def breakdown(hlo: str, top: int = 15):
+    """Debug helper: top while-loops by trip-multiplied DIRECT body bytes
+    (nested loops attributed to their own row)."""
+    comps = _parse_computations(hlo)
+    stats = _build_stats(comps)
+    full = analyze_hlo(hlo)
+    rows = []
+    for name, st in stats.items():
+        for body, cond in st.whiles:
+            trip = max(stats.get(cond, CompStats()).max_const, 1)
+            sub = stats.get(body, CompStats())
+            rows.append((trip * sub.bytes, trip, body, sub.flops * trip))
+    rows.sort(reverse=True)
+    out = [(f"{b/2**30:9.2f}GiB trip={t:6d} flops={fl:.2e} {n[:60]}")
+           for b, t, n, fl in rows[:top]]
+    out.append(f"TOTAL bytes={full.bytes/2**40:.2f}TiB flops={full.flops:.3e}")
+    return "\n".join(out)
+
+
+def analyze_hlo(hlo: str, entry: Optional[str] = None) -> "HloCosts":
+    comps = _parse_computations(hlo)
+    stats = _build_stats(comps)
+
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+        entry = m.group(1) if m else next(iter(comps))
+
+    memo: Dict[str, HloCosts] = {}
+
+    def cost(name: str, depth: int = 0) -> HloCosts:
+        if name in memo:
+            return memo[name]
+        if name not in stats or depth > 64:
+            return HloCosts(0.0, 0.0, {})
+        st = stats[name]
+        fl, by = st.flops, st.bytes
+        coll = dict(st.coll)
+        for body, cond in st.whiles:
+            trip = max(stats.get(cond, CompStats()).max_const, 1)
+            sub = cost(body, depth + 1)
+            fl += trip * sub.flops
+            by += trip * sub.bytes
+            for k, v in sub.coll.items():
+                coll[k] = coll.get(k, 0.0) + trip * v
+        for callee in st.calls:
+            sub = cost(callee, depth + 1)
+            fl += sub.flops
+            by += sub.bytes
+            for k, v in sub.coll.items():
+                coll[k] = coll.get(k, 0.0) + v
+        out = HloCosts(fl, by, coll)
+        memo[name] = out
+        return out
+
+    return cost(entry)
+
+
+def _build_stats(comps: Dict[str, List[str]]) -> Dict[str, CompStats]:
+
+    # module-wide symbol table: op name -> result shape text
+    sym: Dict[str, str] = {}
+    for lines in comps.values():
+        for s in lines:
+            m = _OP_RE.match(s)
+            if m:
+                sym[m.group(1)] = m.group(2)
+
+    def op_bytes_of(names: List[str]) -> int:
+        return sum(_shape_bytes(sym.get(n, "")) for n in names)
+
+    stats: Dict[str, CompStats] = {}
+    for name, lines in comps.items():
+        st = CompStats(coll={c: 0.0 for c in _COLLECTIVES})
+        for s in lines:
+            m = _OP_RE.match(s)
+            if not m:
+                continue
+            _, result_shape, kind = m.groups()
+            rhs = s.split("=", 1)[1]
+            if kind == "constant":
+                mc = re.search(r"s32\[\]\s*constant\((\d+)\)", rhs)
+                if mc:
+                    st.max_const = max(st.max_const, int(mc.group(1)))
+                continue
+            if kind == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", rhs)
+                mcd = re.search(r"condition=%?([\w.\-]+)", rhs)
+                if mb and mcd:
+                    st.whiles.append((mb.group(1), mcd.group(1)))
+                continue
+            if kind in ("conditional", "call"):
+                for mm in re.finditer(
+                        r"(?:branch_computations=\{([^}]*)\}|to_apply=%?([\w.\-]+)|"
+                        r"(?:true|false)_computation=%?([\w.\-]+))", rhs):
+                    for g in mm.groups():
+                        if g:
+                            st.calls.extend(c.strip().lstrip("%")
+                                            for c in g.split(","))
+                st.bytes += _shape_bytes(result_shape)
+                continue
+            base = kind.replace("-start", "")
+            if base in _COLLECTIVES:
+                ob = op_bytes_of(_operand_names(rhs))
+                if ob == 0:
+                    ob = _shape_bytes(result_shape)
+                st.coll[base] += ob
+                st.bytes += _shape_bytes(result_shape) + ob
+                continue
+            if kind.endswith("-done"):
+                continue
+            # flops
+            if kind in ("dot", "dot_general"):
+                res_elems = _shape_elems(result_shape)
+                ops = _operand_names(rhs)
+                k = 1
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                if mc and ops:
+                    lhs_shape = sym.get(ops[0], "")
+                    mshape = _SHAPE_RE.search(lhs_shape)
+                    dims = (mshape.group(2).split(",")
+                            if mshape and mshape.group(2) else [])
+                    for ci in mc.group(1).split(","):
+                        if ci != "" and int(ci) < len(dims):
+                            k *= int(dims[int(ci)])
+                st.flops += 2.0 * res_elems * k
+                st.bytes += _shape_bytes(result_shape) + op_bytes_of(ops[:2])
+                continue
+            if kind == "convolution":
+                res_elems = _shape_elems(result_shape)
+                ops = _operand_names(rhs)
+                ker = _shape_elems(sym.get(ops[1], "")) if len(ops) > 1 else 1
+                out_ch = 1
+                mshape = _SHAPE_RE.search(result_shape)
+                if mshape and mshape.group(2):
+                    out_ch = int(mshape.group(2).split(",")[-1])
+                st.flops += 2.0 * res_elems * max(ker // max(out_ch, 1), 1)
+                st.bytes += _shape_bytes(result_shape) + op_bytes_of(ops[:2])
+                continue
+            if kind in _SKIP_BYTES:
+                continue
+            if kind == "dynamic-update-slice":
+                # in-place window write: read+write the update only, not the
+                # full aliased buffer (counting the result would charge the
+                # whole KV cache per decoded token)
+                ops = _operand_names(rhs)
+                upd = _shape_bytes(sym.get(ops[1], "")) if len(ops) > 1 else 0
+                st.bytes += 2 * upd
+                continue
+            st.bytes += _shape_bytes(result_shape)
+            if kind in ("copy", "copy-start", "fusion", "custom-call",
+                        "scatter", "gather", "sort",
+                        "reduce", "transpose", "reshape", "broadcast",
+                        "concatenate", "pad", "select-and-scatter"):
+                # reads matter for these; dynamic-slice excluded on purpose
+                # (it reads only the sliced window = its result)
+                if kind in ("fusion", "custom-call"):
+                    continue  # operand set too coarse; result-only
+                st.bytes += op_bytes_of(_operand_names(rhs)[:3])
+        stats[name] = st
+
+    return stats
+
+
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    bytes: float
+    coll: Dict[str, float]
+
+    @property
+    def coll_bytes(self) -> float:
+        return float(sum(self.coll.values()))

@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+Target: TPU v5e pods. Single pod = 256 chips as a (data=16, model=16) mesh;
+multi-pod = 2 pods = 512 chips as (pod=2, data=16, model=16). Functions, not
+module constants — importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, model_parallel: int = 16):
+    """Production mesh. ``model_parallel`` re-balances the LOGICAL data/model
+    split over the same 256 chips/pod (a per-architecture tuning knob: TP
+    degree must divide the attention head count or GSPMD falls back to
+    score all-reduces — see EXPERIMENTS.md §Perf pair 2)."""
+    data = 256 // model_parallel
+    shape = (2, data, model_parallel) if multi_pod else (data, model_parallel)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh over host devices for CI-scale distributed tests."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes that carry the global batch / population dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

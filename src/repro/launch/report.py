@@ -1,0 +1,79 @@
+"""Render dry-run/roofline JSON into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.launch.report \
+      --single benchmarks/results/dryrun_single.json \
+      --multi benchmarks/results/dryrun_multi.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | dominant | t_compute | t_memory | t_collective | "
+           "mem/chip | useful FLOPs |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** | "
+            f"{_fmt_s(r['t_compute_s'])} | {_fmt_s(r['t_memory_s'])} | "
+            f"{_fmt_s(r['t_collective_s'])} | "
+            f"{r['peak_memory_gb']:.1f}GB | {r['useful_flops_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def skip_table(rows):
+    out = ["| arch | shape | mesh | reason |", "|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['reason']} |")
+    return "\n".join(out)
+
+
+def compile_proof_table(rows):
+    out = ["| arch | shape | mesh | status | lower | compile |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                       f"{r.get('t_lower_s','-')}s | {r.get('t_compile_s','-')}s |")
+        elif r.get("status") == "FAIL":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"**FAIL** {r.get('error','')} | - | - |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", default="benchmarks/results/dryrun_single.json")
+    ap.add_argument("--multi", default=None)
+    ap.add_argument("--mode", default="roofline",
+                    choices=["roofline", "skips", "compile"])
+    args = ap.parse_args()
+    with open(args.single) as f:
+        rows = json.load(f)
+    if args.multi:
+        with open(args.multi) as f:
+            rows += json.load(f)
+    if args.mode == "roofline":
+        print(roofline_table(rows))
+    elif args.mode == "skips":
+        print(skip_table(rows))
+    else:
+        print(compile_proof_table(rows))
+
+
+if __name__ == "__main__":
+    main()

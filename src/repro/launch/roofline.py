@@ -1,0 +1,165 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Three terms, in seconds, per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips × 819 GB/s HBM)
+    collective = collective_bytes / (chips × 50 GB/s per ICI link)
+
+``cost_analysis`` reports the per-device partitioned program, so FLOPs/bytes
+are multiplied back by chip count before normalizing (i.e. the terms equal
+the per-device values divided by per-chip peaks). collective_bytes is parsed
+from the compiled HLO: the summed operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (per device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of collective ops in an HLO module dump."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs):
+                op = c
+                break
+        if op is None:
+            continue
+        if f"{op}-done(" in rhs:
+            continue  # avoid double counting start/done pairs
+        # operand shapes appear inside the call parens; result shape before op name
+        paren = rhs.find("(")
+        operand_part = rhs[paren:]
+        shapes = _SHAPE_RE.findall(operand_part)
+        if shapes:
+            out[op] += sum(_shape_bytes(d, dims) for d, dims in shapes)
+        else:  # fall back to result shape
+            shapes = _SHAPE_RE.findall(rhs[:paren])
+            out[op] += sum(_shape_bytes(d, dims) for d, dims in shapes)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    peak_memory_bytes: Optional[float]
+    model_flops: float
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+            "peak_memory_gb": (self.peak_memory_bytes / 2**30
+                               if self.peak_memory_bytes else None),
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, chips: int,
+            compiled, model_flops: float) -> Roofline:
+    """Derive roofline terms from a compiled artifact.
+
+    FLOPs/bytes/collectives come from the scan-aware HLO analyzer
+    (``hlo_analysis``) — XLA's cost_analysis counts while bodies once, which
+    under-reports scan-over-layers models by the layer count.
+    """
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                     + getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "output_size_in_bytes", 0)
+                     - getattr(mem, "alias_size_in_bytes", 0))
+    except Exception:
+        peak = None
+    hlo = compiled.as_text()
+    costs = analyze_hlo(hlo)
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=costs.flops, bytes_per_device=costs.bytes,
+        coll_bytes_per_device=costs.coll_bytes,
+        coll_breakdown={k: int(v) for k, v in costs.coll.items() if v},
+        peak_memory_bytes=peak, model_flops=model_flops)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D train / 2·N·D prefill / 2·N·B decode (N = active params)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,187 @@
+"""Sharding rules: parameter / input / cache PartitionSpecs per architecture.
+
+Baseline policy (paper-faithful starting point; §Perf hillclimbs from here):
+- tensor parallelism over the ``model`` axis: vocab, attention heads, FFN
+  hidden, MoE expert axis, Mamba2 inner channels;
+- batch (and the ML Mule population axis) over (``pod``, ``data``);
+- small archs (xlstm-350m, whisper-base) replicate parameters and use the
+  whole mesh for batch — TP would shard 4-head blocks 16 ways;
+- decode KV caches: batch over ``data``; kv-heads over ``model`` when
+  divisible, else head_dim; batch-1 long-context caches shard the sequence
+  axis over ``data`` instead.
+
+Optional FSDP (``fsdp=True``): additionally shards the largest parameter
+dim over ``data`` — the memory-term hillclimb lever (ZeRO-3 analogue).
+
+Every rule checks divisibility and falls back to replication, so any config
+lowers on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape, ModelConfig
+
+REPLICATED_ARCHS = ("xlstm", "audio")   # families too small for 16-way TP
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _dp(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _shard_dim(shape, dim: int, axis, mesh: Mesh, base: Optional[list] = None):
+    """P with `axis` on `dim` if divisible, else replicated there."""
+    spec = base[:] if base else [None] * len(shape)
+    if shape[dim] % _axis_size(mesh, axis) == 0:
+        spec[dim] = axis
+    return P(*spec)
+
+
+def _leaf_name(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(cfg: ModelConfig, params_shapes: Any, mesh: Mesh, *,
+                fsdp: bool = False, replicate: bool = False) -> Any:
+    """PartitionSpec pytree matching the parameter (shape) pytree.
+
+    ``replicate=True`` forces the population-style layout (params replicated,
+    the whole mesh used as data parallelism) — the right scheme for
+    on-device-scale models like granite-moe-1b (§Perf pair 3)."""
+    replicated = replicate or cfg.family in REPLICATED_ARCHS
+    dp = _dp(mesh)
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        name = _leaf_name(path)
+        nd = len(shape)
+        if replicated or nd == 0:
+            return P()
+        spec = None
+        # name-based tensor-parallel rules (last dims; leading stack axes untouched)
+        if name.endswith("embed"):
+            spec = _shard_dim(shape, 0, "model", mesh)
+        elif name.endswith("head"):
+            spec = _shard_dim(shape, nd - 1, "model", mesh)
+        elif "/attn/" in name or "self_attn" in name or "cross_attn" in name:
+            # shard projections ONLY when whole heads land on shards —
+            # otherwise GSPMD shards the contracting head_dim and all-reduces
+            # attention scores every block (measured: the dominant collective
+            # for 40-head qwen2.5 on a 16-way model axis)
+            tp = mesh.shape["model"]
+            q_ok = cfg.n_heads % tp == 0
+            kv_ok = cfg.n_kv_heads % tp == 0
+            if any(name.endswith(s) for s in ("wq", "bq")) and q_ok:
+                spec = _shard_dim(shape, nd - 1, "model", mesh)
+            elif any(name.endswith(s) for s in ("wk", "wv", "bk", "bv")) and kv_ok:
+                spec = _shard_dim(shape, nd - 1, "model", mesh)
+            elif name.endswith("wo") and q_ok:
+                spec = _shard_dim(shape, nd - 2, "model", mesh)
+            else:
+                spec = P()
+        elif "/moe/" in name:
+            if name.endswith("router"):
+                spec = P()
+            else:  # [.., E, d, f] / [.., E, f, d]: expert-parallel over model
+                spec = _shard_dim(shape, nd - 3, "model", mesh)
+        elif "/mixer/" in name:  # Mamba2 (head-parallel TP)
+            if any(name.endswith(s) for s in ("w_z", "w_x", "w_dt", "conv_x_w")):
+                spec = _shard_dim(shape, nd - 1, "model", mesh)
+            elif name.endswith("out_proj"):
+                spec = _shard_dim(shape, nd - 2, "model", mesh)
+            elif any(name.endswith(s) for s in ("A_log", "D", "dt_bias", "conv_x_b",
+                                                "norm_scale")):
+                spec = _shard_dim(shape, nd - 1, "model", mesh)
+        elif "mlp/" in name or "/mlp" in name:
+            if name.endswith("wo"):
+                spec = _shard_dim(shape, nd - 2, "model", mesh)
+            elif "wi_" in name:
+                spec = _shard_dim(shape, nd - 1, "model", mesh)
+        if spec is None:
+            spec = P()
+        if fsdp and nd >= 2:
+            # additionally shard the largest still-unsharded dim over data
+            dims = sorted(range(nd), key=lambda d: -shape[d])
+            taken = list(spec) + [None] * (nd - len(spec))
+            for d in dims:
+                if taken[d] is None and shape[d] % _axis_size(mesh, dp) == 0 \
+                        and shape[d] >= 1024:
+                    taken[d] = dp
+                    break
+            spec = P(*taken)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+                replicate: bool = False) -> Dict[str, Any]:
+    """Input PartitionSpecs for train/prefill batches."""
+    dp = _dp(mesh)
+    small = replicate or cfg.family in REPLICATED_ARCHS
+    baxis = (dp if not small else
+             (("pod", "data", "model") if "pod" in mesh.axis_names
+              else ("data", "model")))
+    b = shape.global_batch
+    if b % _axis_size(mesh, baxis) != 0:
+        baxis = dp if b % _axis_size(mesh, dp) == 0 else None
+    specs: Dict[str, Any] = {"tokens": P(baxis, None)}
+    if cfg.family == "vlm":
+        specs["vision_embed"] = P(baxis, None, None)
+    if cfg.family == "audio":
+        specs["audio_embed"] = P(baxis, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes: Any, batch: int, mesh: Mesh) -> Any:
+    """PartitionSpecs for decode caches (pytree matching cache shapes)."""
+    dp = _dp(mesh)
+    dp_size = _axis_size(mesh, dp)
+    small_batch = batch % dp_size != 0
+
+    def rule(path, leaf):
+        shape = leaf.shape
+        name = _leaf_name(path)
+        nd = len(shape)
+        spec = [None] * nd
+        # locate the batch dim: first dim equal to `batch` (after any stack axis)
+        try:
+            bdim = next(d for d in range(nd) if shape[d] == batch)
+        except StopIteration:
+            return P()
+        if not small_batch:
+            spec[bdim] = dp
+        if ("k" in name.split("/")[-1] or "v" in name.split("/")[-1]) and nd >= bdim + 4:
+            # KV cache [.., B, S, KV, hd]
+            sdim, kvdim, hddim = bdim + 1, bdim + 2, bdim + 3
+            if shape[kvdim] % mesh.shape["model"] == 0:
+                spec[kvdim] = "model"
+            elif shape[hddim] % mesh.shape["model"] == 0:
+                spec[hddim] = "model"
+            if small_batch and shape[sdim] % dp_size == 0:
+                spec[sdim] = dp
+        elif "ssm" in name and nd >= bdim + 3:
+            # [.., B, H, P, N]
+            if shape[bdim + 1] % mesh.shape["model"] == 0:
+                spec[bdim + 1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,64 @@
+"""Step builders: the jit targets for training, prefill and decode."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import Optimizer
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    microbatches: int = 1) -> Callable:
+    """Train step, optionally with gradient accumulation over microbatches
+    (divides activation residency by ``microbatches``; the memory-roofline
+    lever for train shapes whose temps exceed HBM — EXPERIMENTS.md §Perf)."""
+    if microbatches <= 1:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            params, opt_state = optimizer.update(params, grads, opt_state)
+            metrics = dict(metrics, loss=loss)
+            return params, opt_state, metrics
+
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def split(leaf):
+            b = leaf.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return leaf.reshape((microbatches, b // microbatches) + leaf.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def accum(carry, mb):
+            gsum, lsum = carry
+            (loss, _), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, mb)
+            gsum = jax.tree.map(lambda a, g: a + g, gsum, grads)
+            return (gsum, lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(accum, (zeros, jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.float32), gsum)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, {"loss": lsum / microbatches}
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    return prefill
+
+
+def make_serve_step(model: Model) -> Callable:
+    def serve(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve

@@ -1,0 +1,3 @@
+from repro.mobility.random_walk import (  # noqa: F401
+    MobilityConfig, init_mobility, mobility_step, simulate_trajectories, space_of)
+from repro.mobility.trace import synth_foursquare_trace, trace_to_colocation  # noqa: F401

@@ -1,0 +1,128 @@
+"""Random-walk mobility with crossing probability P_cross (paper Sec 4.1).
+
+Geometry: ``n_areas`` isolated unit squares. Each area holds four spaces —
+the corner cells of side ``space_size`` — and an empty central corridor (the
+paper's Fig. 4 layout). One fixed device sits in each space.
+
+Dynamics per step (vectorized over mules, jittable):
+- gaussian step proposal, reflected at the area walls;
+- if the proposal exits the mule's current space, it is accepted with
+  probability ``p_cross`` and otherwise reflected back into the space
+  (``p_cross = 0`` -> devices never leave; higher values -> more inter-space
+  movement), matching the paper's "probability of leaving the current space".
+- areas are fully isolated (the paper observed only ~0.7% cross-city travel
+  and simulated none).
+
+``space_of`` maps positions to space ids 0..3 or -1 (corridor). Global fixed
+device id = area * 4 + space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilityConfig:
+    n_mules: int = 20
+    n_areas: int = 2
+    p_cross: float = 0.1
+    step_sigma: float = 0.08
+    space_size: float = 0.42     # corner cell side; corridor is the rest
+    exchange_steps: int = 3      # time steps to complete one model transfer
+
+
+def space_of(pos: jnp.ndarray, space_size: float) -> jnp.ndarray:
+    """pos: [..., 2] in [0,1]^2 -> space id 0..3 or -1 (corridor)."""
+    x, y = pos[..., 0], pos[..., 1]
+    lo = space_size
+    hi = 1.0 - space_size
+    in_left = x < lo
+    in_right = x > hi
+    in_bot = y < lo
+    in_top = y > hi
+    sid = jnp.where(in_left & in_bot, 0,
+          jnp.where(in_right & in_bot, 1,
+          jnp.where(in_left & in_top, 2,
+          jnp.where(in_right & in_top, 3, -1))))
+    return sid
+
+
+def _space_bounds(sid, space_size):
+    """Bounding box (lo, hi) per axis for a space id (when sid >= 0)."""
+    right = (sid == 1) | (sid == 3)
+    top = sid >= 2
+    lo_x = jnp.where(right, 1.0 - space_size, 0.0)
+    hi_x = jnp.where(right, 1.0, space_size)
+    lo_y = jnp.where(top, 1.0 - space_size, 0.0)
+    hi_y = jnp.where(top, 1.0, space_size)
+    return lo_x, hi_x, lo_y, hi_y
+
+
+def init_mobility(key, cfg: MobilityConfig):
+    """Mules start uniformly inside random spaces of their (fixed) area."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    m = cfg.n_mules
+    area = jnp.arange(m) % cfg.n_areas                      # balanced assignment
+    sid = jax.random.randint(k1, (m,), 0, 4)
+    u = jax.random.uniform(k2, (m, 2)) * cfg.space_size
+    lo_x, _, lo_y, _ = _space_bounds(sid, cfg.space_size)
+    pos = jnp.stack([lo_x + u[:, 0], lo_y + u[:, 1]], axis=-1)
+    return {
+        "pos": pos,                                          # [M, 2]
+        "area": area.astype(jnp.int32),                      # [M]
+        "dwell": jnp.zeros((m,), jnp.int32),                 # consecutive steps in space
+        "key": k3,
+    }
+
+
+def mobility_step(state, cfg: MobilityConfig):
+    """One time step. Returns (new_state, info dict)."""
+    key, k_step, k_cross = jax.random.split(state["key"], 3)
+    pos = state["pos"]
+    m = pos.shape[0]
+    cur_sid = space_of(pos, cfg.space_size)
+
+    prop = pos + cfg.step_sigma * jax.random.normal(k_step, (m, 2))
+    prop = jnp.clip(prop, 0.0, 1.0)                          # area walls
+    prop_sid = space_of(prop, cfg.space_size)
+
+    exits = (cur_sid >= 0) & (prop_sid != cur_sid)
+    allow = jax.random.uniform(k_cross, (m,)) < cfg.p_cross
+    # reflected-back position: clamp into current space bounds (eps keeps the
+    # point strictly inside — space membership uses strict inequalities)
+    eps = 1e-4
+    lo_x, hi_x, lo_y, hi_y = _space_bounds(cur_sid, cfg.space_size)
+    clamped = jnp.stack(
+        [jnp.clip(prop[:, 0], lo_x + eps * (lo_x > 0), hi_x - eps * (hi_x < 1)),
+         jnp.clip(prop[:, 1], lo_y + eps * (lo_y > 0), hi_y - eps * (hi_y < 1))],
+        axis=-1)
+    new_pos = jnp.where((exits & ~allow)[:, None], clamped, prop)
+    new_sid = space_of(new_pos, cfg.space_size)
+
+    same = (new_sid == cur_sid) & (new_sid >= 0)
+    dwell = jnp.where(same, state["dwell"] + 1, jnp.where(new_sid >= 0, 1, 0))
+
+    # an exchange completes every `exchange_steps` consecutive steps in a space
+    exchange = (dwell > 0) & (dwell % cfg.exchange_steps == 0)
+    fixed_id = jnp.where(new_sid >= 0, state["area"] * 4 + new_sid, -1)
+
+    new_state = {"pos": new_pos, "area": state["area"], "dwell": dwell, "key": key}
+    info = {"space": new_sid, "fixed_id": fixed_id.astype(jnp.int32),
+            "exchange": exchange, "pos": new_pos}
+    return new_state, info
+
+
+def simulate_trajectories(key, cfg: MobilityConfig, n_steps: int):
+    """Unrolled trajectory (for analysis/benchmarks): dict of [T, M] arrays."""
+    state = init_mobility(key, cfg)
+
+    def step(s, _):
+        s, info = mobility_step(s, cfg)
+        return s, info
+
+    _, infos = jax.lax.scan(step, state, None, length=n_steps)
+    return infos

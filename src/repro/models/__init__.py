@@ -1,0 +1,9 @@
+"""Model zoo.
+
+- ``transformer.py`` — unified decoder LM covering dense / moe / ssm / hybrid /
+  vlm families plus the xLSTM stack; ``build_model(config)`` returns a
+  ``Model`` with init / forward / decode_step / init_cache.
+- ``whisper.py`` — encoder-decoder (audio family).
+- ``cnn.py`` — the paper's CNN and LSTM-CNN used by the ML Mule simulations.
+"""
+from repro.models.api import Model, build_model  # noqa: F401

@@ -1,0 +1,382 @@
+"""Unified model API: every assigned architecture becomes a ``Model`` with
+``init / loss / forward / init_cache / decode_step / input_specs``.
+
+A config is compiled into a **stage program**: consecutive layers of the same
+kind (same attention window, same mixer) are grouped and executed with a
+single ``lax.scan`` over stacked parameters — this keeps HLO size and compile
+time bounded at 94 layers while still allowing heterogeneous stacks
+(gemma3 5:1 local:global, zamba2 mamba+shared-attn, xLSTM mLSTM/sLSTM pairs).
+
+Stage kinds:
+- ``attn``        — GQA attention + gated MLP (window=None or int)
+- ``moe``         — GQA attention + mixture-of-experts FFN
+- ``mamba``       — Mamba2/SSD mixer
+- ``shared_attn`` — zamba2's shared-weight attention block (params stored once)
+- ``xlstm_pair``  — (mLSTM block, sLSTM block) pair
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import InputShape, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import apply_mlp, apply_norm, dense_init, init_mlp, init_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    kind: str            # attn | moe | mamba | shared_attn | xlstm_pair
+    count: int           # number of layers folded into this stage
+    window: Optional[int] = None
+
+
+# ---------------------------------------------------------------------------
+# program construction
+# ---------------------------------------------------------------------------
+
+
+def build_program(cfg: ModelConfig) -> List[Stage]:
+    if cfg.family == "xlstm":
+        assert cfg.n_layers % 2 == 0, "xlstm program scans (mLSTM, sLSTM) pairs"
+        return [Stage("xlstm_pair", cfg.n_layers // 2)]
+
+    kinds: List[Tuple[str, Optional[int]]] = []
+    for layer in range(cfg.n_layers):
+        if cfg.family in ("ssm", "hybrid"):
+            if cfg.attn_layer_interval and (layer + 1) % cfg.attn_layer_interval == 0:
+                kinds.append(("shared_attn", None))
+            else:
+                kinds.append(("mamba", None))
+        else:
+            window = cfg.sliding_window
+            if window is not None and cfg.global_layer_interval:
+                if (layer + 1) % cfg.global_layer_interval == 0:
+                    window = None  # global layer
+            kind = "moe" if cfg.n_experts else "attn"
+            kinds.append((kind, window))
+
+    stages: List[Stage] = []
+    for kind, window in kinds:
+        if stages and stages[-1].kind == kind and stages[-1].window == window \
+                and kind != "shared_attn":
+            stages[-1] = Stage(kind, stages[-1].count + 1, window)
+        else:
+            stages.append(Stage(kind, 1, window))
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str):
+    if kind in ("attn", "moe", "shared_attn"):
+        k1, k2 = jax.random.split(key)
+        p = {"norm1": init_norm(cfg.norm, cfg.d_model),
+             "attn": attn_lib.init_attention(k1, cfg),
+             "norm2": init_norm(cfg.norm, cfg.d_model)}
+        if kind == "moe":
+            p["moe"] = moe_lib.init_moe(k2, cfg)
+        else:
+            p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff)
+        return p
+    if kind == "mamba":
+        return {"norm": init_norm(cfg.norm, cfg.d_model),
+                "mixer": mamba_lib.init_mamba2(key, cfg)}
+    if kind == "xlstm_pair":
+        k1, k2 = jax.random.split(key)
+        return {"mlstm": xlstm_lib.init_mlstm(k1, cfg),
+                "slstm": xlstm_lib.init_slstm(k2, cfg)}
+    raise ValueError(kind)
+
+
+def _apply_layer(params, x, positions, cfg: ModelConfig, kind: str,
+                 window: Optional[int], shared_params=None, backend: str = "ref",
+                 mesh=None, dp_axes=("data",), head_axis=None, seq_axis=None,
+                 moe_ep_axis="model"):
+    """Full-sequence forward for one layer. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "moe", "shared_attn"):
+        p = shared_params if kind == "shared_attn" else params
+        h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        x = x + attn_lib.attn_forward(p["attn"], h, positions, cfg,
+                                      window=window, backend=backend,
+                                      head_axis=head_axis, seq_axis=seq_axis)
+        h = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        if kind == "moe":
+            out, aux = moe_lib.apply_moe(p["moe"], h, cfg, mesh=mesh,
+                                         dp_axes=dp_axes, ep_axis=moe_ep_axis)
+            x = x + out
+        else:
+            x = x + apply_mlp(p["mlp"], h, cfg.act, jnp.dtype(cfg.dtype))
+        return x, aux
+    if kind == "mamba":
+        h = apply_norm(params["norm"], x, cfg.norm, cfg.norm_eps)
+        return x + mamba_lib.mamba2_forward(params["mixer"], h, cfg, backend=backend), aux
+    if kind == "xlstm_pair":
+        x = xlstm_lib.mlstm_forward(params["mlstm"], x, cfg)
+        x = xlstm_lib.slstm_forward(params["slstm"], x, cfg, backend=backend)
+        return x, aux
+    raise ValueError(kind)
+
+
+def _decode_layer(params, x, cache, pos, cfg: ModelConfig, kind: str,
+                  window: Optional[int], shared_params=None, mesh=None,
+                  dp_axes=("data",)):
+    """Single-token decode for one layer. Returns (x, new_cache)."""
+    if kind in ("attn", "moe", "shared_attn"):
+        p = shared_params if kind == "shared_attn" else params
+        h = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        out, cache = attn_lib.attn_decode(p["attn"], h, cache, pos, cfg, window=window)
+        x = x + out
+        h = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        if kind == "moe":
+            out, _ = moe_lib.apply_moe(p["moe"], h, cfg, mesh=mesh,
+                                       dp_axes=dp_axes)
+            x = x + out
+        else:
+            x = x + apply_mlp(p["mlp"], h, cfg.act, jnp.dtype(cfg.dtype))
+        return x, cache
+    if kind == "mamba":
+        h = apply_norm(params["norm"], x, cfg.norm, cfg.norm_eps)
+        out, cache = mamba_lib.mamba2_decode(params["mixer"], h, cache, cfg)
+        return x + out, cache
+    if kind == "xlstm_pair":
+        x, mc = xlstm_lib.mlstm_decode(params["mlstm"], x, cache["mlstm"], cfg)
+        x, sc = xlstm_lib.slstm_decode(params["slstm"], x, cache["slstm"], cfg)
+        return x, {"mlstm": mc, "slstm": sc}
+    raise ValueError(kind)
+
+
+def _init_stage_cache(cfg: ModelConfig, stage: Stage, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16):
+    def one():
+        if stage.kind in ("attn", "moe", "shared_attn"):
+            return attn_lib.init_kv_cache(cfg, batch, max_seq, window=stage.window,
+                                          dtype=dtype)
+        if stage.kind == "mamba":
+            return mamba_lib.init_mamba2_cache(cfg, batch)
+        if stage.kind == "xlstm_pair":
+            return {"mlstm": xlstm_lib.init_mlstm_cache(cfg, batch),
+                    "slstm": xlstm_lib.init_slstm_cache(cfg, batch)}
+        raise ValueError(stage.kind)
+
+    c = one()
+    if stage.count > 1:
+        c = jax.tree.map(lambda l: jnp.broadcast_to(l[None], (stage.count,) + l.shape), c)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    program: List[Stage]
+    backend: str = "ref"          # attention/ssm kernel backend
+    remat: bool = False           # checkpoint each layer in the train path
+    unroll: bool = False          # python-loop layers instead of lax.scan
+                                  # (dry-run cost analysis counts scan bodies
+                                  # once; unrolling makes HLO costs exact)
+    mesh: Any = None              # Mesh for expert-parallel shard_map (MoE)
+    dp_axes: tuple = ("data",)    # mesh axes carrying the batch
+    remat_policy: str = "full"    # full | dots (save matmul outputs so the
+                                  # backward recompute skips TP all-reduces)
+    head_axis: Any = None         # shard attention heads over this mesh axis
+                                  # via activation constraints (GSPMD pads
+                                  # non-divisible head counts)
+    seq_axis: Any = None          # context parallelism: shard attention over
+                                  # the sequence dim instead (KV all-gather)
+    moe_ep_axis: Any = "model"    # MoE expert-parallel axis; None = pure-DP
+                                  # replicated-expert shard_map
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.program) + 4)
+        params: Dict[str, Any] = {
+            "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model)),
+            "final_norm": init_norm(cfg.norm, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab))
+        if any(s.kind == "shared_attn" for s in self.program):
+            params["shared_attn"] = _init_layer(keys[2], cfg, "shared_attn")
+
+        stage_params = []
+        for i, stage in enumerate(self.program):
+            sk = jax.random.split(jax.random.fold_in(key, 1000 + i), stage.count)
+            layers = [_init_layer(k, cfg, stage.kind) for k in sk]
+            if stage.kind == "shared_attn":
+                stage_params.append({})  # weights live in params["shared_attn"]
+            elif stage.count > 1:
+                stage_params.append(jax.tree.map(lambda *ls: jnp.stack(ls), *layers))
+            else:
+                stage_params.append(layers[0])
+        params["stages"] = stage_params
+        return params
+
+    # -- embedding helpers ----------------------------------------------------
+    def _embed(self, params, tokens, extra: Dict[str, Any]):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            vis = extra["vision_embed"].astype(x.dtype)       # [B, vt, D]
+            x = jnp.concatenate([vis, x], axis=1)
+        return x
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        w = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return (x.astype(jnp.float32) @ w.astype(jnp.float32))
+
+    def _positions(self, batch_size: int, seq: int):
+        cfg = self.cfg
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (batch_size, seq))
+        if cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[None], (3, batch_size, seq))
+        return pos
+
+    # -- full-sequence forward ------------------------------------------------
+    def forward(self, params, batch: Dict[str, Any]):
+        """Returns (logits [B,S,V], aux_loss). batch: tokens [+ vision_embed]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens, batch)
+        b, s, _ = x.shape
+        positions = batch.get("positions")
+        if positions is None:
+            positions = self._positions(b, s)
+        aux_total = jnp.zeros((), jnp.float32)
+        shared = params.get("shared_attn")
+
+        for stage, sp in zip(self.program, params["stages"]):
+            body = functools.partial(_apply_layer, cfg=cfg, kind=stage.kind,
+                                     window=stage.window, shared_params=shared,
+                                     backend=self.backend, positions=positions,
+                                     mesh=self.mesh, dp_axes=self.dp_axes,
+                                     head_axis=self.head_axis,
+                                     seq_axis=self.seq_axis,
+                                     moe_ep_axis=self.moe_ep_axis)
+            if self.remat:
+                policy = None
+                if self.remat_policy == "dots":
+                    policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                body = jax.checkpoint(body, policy=policy)
+            if stage.count > 1 and not self.unroll:
+                def scan_fn(carry, layer_params, _body=body):
+                    x, aux = carry
+                    x, a = _body(layer_params, x)
+                    return (x, aux + a), None
+                (x, aux_total), _ = jax.lax.scan(scan_fn, (x, aux_total), sp)
+            elif stage.count > 1:
+                for li in range(stage.count):
+                    lp = jax.tree.map(lambda l, _li=li: l[_li], sp)
+                    x, a = body(lp, x)
+                    aux_total = aux_total + a
+            else:
+                x, a = body(sp, x)
+                aux_total = aux_total + a
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return self._unembed(params, x), aux_total
+
+    # -- loss -----------------------------------------------------------------
+    def loss(self, params, batch: Dict[str, Any]):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch)
+        tokens = batch["tokens"]
+        if cfg.family == "vlm":   # drop the vision prefix from the loss
+            logits = logits[:, cfg.vision_tokens:]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        tgt = tokens[:, 1:]
+        nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll) + 0.01 * aux
+        return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+    # -- decode ----------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        return [
+            _init_stage_cache(self.cfg, s, batch, max_seq, dtype) for s in self.program
+        ]
+
+    def decode_step(self, params, cache, token, pos):
+        """token: [B,1] int32; pos: scalar int32. Returns (logits [B,V], cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0).astype(jnp.dtype(cfg.dtype))
+        shared = params.get("shared_attn")
+        new_cache = []
+        for stage, sp, sc in zip(self.program, params["stages"], cache):
+            if stage.count > 1 and not self.unroll:
+                def scan_fn(x, inp, _stage=stage):
+                    layer_params, layer_cache = inp
+                    x, nc = _decode_layer(layer_params, x, layer_cache, pos, cfg,
+                                          _stage.kind, _stage.window, shared,
+                                          self.mesh, self.dp_axes)
+                    return x, nc
+                x, nc = jax.lax.scan(scan_fn, x, (sp, sc))
+            elif stage.count > 1:
+                ncs = []
+                for li in range(stage.count):
+                    lp = jax.tree.map(lambda l, _li=li: l[_li], sp)
+                    lc = jax.tree.map(lambda l, _li=li: l[_li], sc)
+                    x, nc1 = _decode_layer(lp, x, lc, pos, cfg, stage.kind,
+                                           stage.window, shared, self.mesh,
+                                           self.dp_axes)
+                    ncs.append(nc1)
+                nc = jax.tree.map(lambda *ls: jnp.stack(ls), *ncs)
+            else:
+                x, nc = _decode_layer(sp, x, sc, pos, cfg, stage.kind, stage.window,
+                                      shared, self.mesh, self.dp_axes)
+            new_cache.append(nc)
+        x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+        return self._unembed(params, x)[:, 0], new_cache
+
+    # -- dry-run input specs ----------------------------------------------------
+    def input_specs(self, shape: InputShape) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        b = shape.global_batch
+        if shape.kind in ("train", "prefill"):
+            s = shape.seq_len
+            specs: Dict[str, Any] = {}
+            if cfg.family == "vlm":
+                specs["tokens"] = jax.ShapeDtypeStruct((b, s - cfg.vision_tokens), jnp.int32)
+                specs["vision_embed"] = jax.ShapeDtypeStruct(
+                    (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+            else:
+                specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            return specs
+        # decode: one token + cache
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "cache": jax.eval_shape(
+                lambda: self.init_cache(b, shape.seq_len)),
+        }
+
+
+def build_model(cfg: ModelConfig, *, backend: str = "ref", remat: bool = False,
+                unroll: bool = False, mesh: Any = None,
+                dp_axes: tuple = ("data",), remat_policy: str = "full",
+                head_axis: Any = None, seq_axis: Any = None,
+                moe_ep_axis: Any = "model") -> Model:
+    kw = dict(cfg=cfg, program=build_program(cfg), backend=backend, remat=remat,
+              unroll=unroll, mesh=mesh, dp_axes=dp_axes,
+              remat_policy=remat_policy, head_axis=head_axis,
+              seq_axis=seq_axis, moe_ep_axis=moe_ep_axis)
+    if cfg.family == "audio":
+        from repro.models.whisper import WhisperModel
+        return WhisperModel(**kw)
+    return Model(**kw)

@@ -1,0 +1,188 @@
+"""GQA attention layer: full-sequence (train/prefill) and KV-cache decode.
+
+Supports QKV bias (qwen), sliding windows (gemma3 local layers; rolling KV
+cache at decode), RoPE and M-RoPE (qwen2-vl), cross-attention (whisper).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.layers import apply_rope, dense_init, rope_angles
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, cfg.n_heads * hd)),
+        "wk": dense_init(k2, (d, cfg.n_kv_heads * hd)),
+        "wv": dense_init(k3, (d, cfg.n_kv_heads * hd)),
+        "wo": dense_init(k4, (cfg.n_heads * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig, compute_dtype):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    xc = x.astype(compute_dtype)
+    q = xc @ params["wq"].astype(compute_dtype)
+    k = xc @ params["wk"].astype(compute_dtype)
+    v = xc @ params["wv"].astype(compute_dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    return (q.reshape(b, s, cfg.n_heads, hd),
+            k.reshape(b, s, cfg.n_kv_heads, hd),
+            v.reshape(b, s, cfg.n_kv_heads, hd))
+
+
+def _constrain_heads(t, head_axis: Optional[str]):
+    """Shard the head dim of [B,S,H,hd] over `head_axis` (GSPMD pads when the
+    head count doesn't divide — how non-divisible TP stays score-AR-free)."""
+    if head_axis is None:
+        return t
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            t, P(*([None] * (t.ndim - 2) + [head_axis, None])))
+    except (ValueError, RuntimeError, TypeError):
+        return t
+
+
+def _constrain_seq(t, seq_axis: Optional[str]):
+    """Context parallelism: shard the sequence dim of [B,S,H,hd] over
+    `seq_axis`; GSPMD all-gathers K/V where attention needs them (the
+    Llama3-style CP layout for head counts that don't divide the TP axis)."""
+    if seq_axis is None:
+        return t
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(
+            t, P(None, seq_axis, None, None))
+    except (ValueError, RuntimeError, TypeError):
+        return t
+
+
+def attn_forward(params, x, positions, cfg: ModelConfig, *,
+                 window: Optional[int] = None, causal: bool = True,
+                 backend: str = "ref", rope: bool = True,
+                 head_axis: Optional[str] = None,
+                 seq_axis: Optional[str] = None) -> jnp.ndarray:
+    """Full-sequence self-attention. positions: [B,S] or [3,B,S] (M-RoPE)."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    q, k, v = _qkv(params, x, cfg, compute_dtype)
+    q = _constrain_heads(q, head_axis)
+    k = _constrain_heads(k, head_axis if cfg.n_kv_heads > 1 else None)
+    v = _constrain_heads(v, head_axis if cfg.n_kv_heads > 1 else None)
+    q = _constrain_seq(q, seq_axis)
+    hd = cfg.resolved_head_dim
+    if rope:
+        ang = rope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+    out = flash_attention(q, k, v, causal=causal, window=window, backend=backend)
+    b, s, _, _ = out.shape
+    out = out.reshape(b, s, cfg.n_heads * hd).astype(compute_dtype)
+    return (out @ params["wo"].astype(compute_dtype)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  window: Optional[int] = None, dtype=jnp.bfloat16):
+    """Cache for ONE attention layer. Rolling buffer when windowed."""
+    hd = cfg.resolved_head_dim
+    slots = min(window, max_seq) if window is not None else max_seq
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def attn_decode(params, x, cache, pos, cfg: ModelConfig, *,
+                window: Optional[int] = None, rope: bool = True):
+    """One-token decode. x: [B,1,D]; pos: scalar int32 (current position).
+
+    Cached K/V are stored post-RoPE. For windowed layers the cache is a
+    rolling buffer of ``window`` slots written at ``pos % window``.
+    """
+    compute_dtype = jnp.dtype(cfg.dtype)
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions, (3, b, 1))
+    q, k, v = _qkv(params, x, cfg, compute_dtype)
+    if rope:
+        ang = rope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+        q = apply_rope(q, ang)      # [B,1,H,hd]
+        k = apply_rope(k, ang)      # [B,1,KV,hd]
+
+    slots = cache["k"].shape[1]
+    slot = pos % slots if window is not None else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    # attention over the cache (linear in cache length)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, cfg.n_kv_heads, g, hd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    sc = jnp.einsum("bikgd,bjkd->bkgj", qg * scale, ck.astype(jnp.float32))  # [B,KV,G,slots]
+    slot_idx = jnp.arange(slots)
+    if window is not None:
+        # slot s holds position p ≡ s (mod slots), the largest such p ≤ pos
+        slot_pos = pos - ((pos - slot_idx) % slots)
+        valid = (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - window)
+    else:
+        valid = slot_idx <= pos
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgj,bjkd->bkgd", p, cv.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.n_heads * hd).astype(compute_dtype)
+    out = (out @ params["wo"].astype(compute_dtype)).astype(x.dtype)
+    return out, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attn_forward(params, x, enc_k, enc_v, cfg: ModelConfig):
+    """x: [B,S,D] queries; enc_k/enc_v: [B,Se,KV,hd] precomputed from encoder."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    xc = x.astype(compute_dtype)
+    q = (xc @ params["wq"].astype(compute_dtype)).reshape(b, s, cfg.n_heads, hd)
+    out = flash_attention(q, enc_k, enc_v, causal=False, backend="ref")
+    out = out.reshape(b, s, cfg.n_heads * hd).astype(compute_dtype)
+    return (out @ params["wo"].astype(compute_dtype)).astype(x.dtype)
+
+
+def cross_kv(params, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    b, se, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    e = enc_out.astype(compute_dtype)
+    k = (e @ params["wk"].astype(compute_dtype)).reshape(b, se, cfg.n_kv_heads, hd)
+    v = (e @ params["wv"].astype(compute_dtype)).reshape(b, se, cfg.n_kv_heads, hd)
+    return k, v

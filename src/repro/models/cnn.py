@@ -1,0 +1,129 @@
+"""The paper's task models.
+
+- ``CNN`` (Sec 4.2.1): two conv blocks (3x3 conv, batch norm, ReLU, 2x2 max
+  pool) + a two-layer FC classifier — CIFAR-100 super-class task.
+- ``LSTM-CNN`` (Sec 4.3.1, Xia et al. 2020): two strided 1-D conv blocks over
+  the IMU window followed by an LSTM and a dense classifier — HAR task.
+
+Batch norm uses in-batch statistics (no running stats); in federated
+simulations the learned scale/bias are part of the exchanged model, which is
+the common convention in FL research on small CNNs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mule_cnn import CNNConfig
+from repro.configs.mule_lstm_cnn import LSTMCNNConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# CNN (image classification)
+# ---------------------------------------------------------------------------
+
+
+def init_cnn(key, cfg: CNNConfig):
+    f1, f2 = cfg.conv_features
+    ks = jax.random.split(key, 4)
+    flat = (cfg.image_size // 4) * (cfg.image_size // 4) * f2
+    return {
+        "conv1": dense_init(ks[0], (3, 3, cfg.channels, f1), scale=0.1),
+        "bn1": {"scale": jnp.ones((f1,)), "bias": jnp.zeros((f1,))},
+        "conv2": dense_init(ks[1], (3, 3, f1, f2), scale=0.1),
+        "bn2": {"scale": jnp.ones((f2,)), "bias": jnp.zeros((f2,))},
+        "fc1": dense_init(ks[2], (flat, cfg.hidden), scale=0.05),
+        "fc1_b": jnp.zeros((cfg.hidden,)),
+        "fc2": dense_init(ks[3], (cfg.hidden, cfg.n_classes), scale=0.05),
+        "fc2_b": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def _conv2d(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _bn(x, p, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params, images):
+    """images: [B, H, W, C] -> logits [B, n_classes]."""
+    x = _pool(jax.nn.relu(_bn(_conv2d(images, params["conv1"]), params["bn1"])))
+    x = _pool(jax.nn.relu(_bn(_conv2d(x, params["conv2"]), params["bn2"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
+    return x @ params["fc2"] + params["fc2_b"]
+
+
+# ---------------------------------------------------------------------------
+# LSTM-CNN (IMU HAR)
+# ---------------------------------------------------------------------------
+
+
+def init_lstm_cnn(key, cfg: LSTMCNNConfig):
+    f1, f2 = cfg.conv_features
+    h = cfg.lstm_hidden
+    ks = jax.random.split(key, 6)
+    return {
+        "conv1": dense_init(ks[0], (5, cfg.channels, f1), scale=0.1),
+        "conv1_b": jnp.zeros((f1,)),
+        "conv2": dense_init(ks[1], (5, f1, f2), scale=0.1),
+        "conv2_b": jnp.zeros((f2,)),
+        "lstm_wx": dense_init(ks[2], (f2, 4 * h), scale=0.08),
+        "lstm_wh": dense_init(ks[3], (h, 4 * h), scale=0.08),
+        "lstm_b": jnp.zeros((4 * h,)),
+        "fc": dense_init(ks[4], (h, cfg.n_classes), scale=0.05),
+        "fc_b": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def _conv1d(x, w, b, stride):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return out + b
+
+
+def lstm_cnn_forward(params, x):
+    """x: [B, T, C] IMU window -> logits [B, n_classes]."""
+    h1 = jax.nn.relu(_conv1d(x, params["conv1"], params["conv1_b"], 2))
+    h2 = jax.nn.relu(_conv1d(h1, params["conv2"], params["conv2_b"], 2))
+    b, t, f = h2.shape
+    hidden = params["lstm_wh"].shape[0]
+
+    def lstm_step(carry, xt):
+        h, c = carry
+        gates = xt @ params["lstm_wx"] + h @ params["lstm_wh"] + params["lstm_b"]
+        i, f_, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f_ + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((b, hidden))
+    (h, _), _ = jax.lax.scan(lstm_step, (h0, h0), jnp.moveaxis(h2, 1, 0))
+    return h @ params["fc"] + params["fc_b"]
+
+
+# ---------------------------------------------------------------------------
+# shared loss / metric helpers
+# ---------------------------------------------------------------------------
+
+
+def xent_loss(logits, labels):
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(lp, labels[:, None], axis=-1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

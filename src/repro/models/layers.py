@@ -1,0 +1,121 @@
+"""Shared building blocks: norms, activations, init, RoPE / M-RoPE, MLP."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, dim: int):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), jnp.float32)}
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2]."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                mrope_sections: Optional[Tuple[int, int, int]] = None) -> jnp.ndarray:
+    """Rotation angles [..., S, head_dim//2].
+
+    positions: [B, S] for plain RoPE, or [3, B, S] (t/h/w streams) for M-RoPE.
+    For M-RoPE, frequency slots are split into sections fed by the three
+    position streams (Qwen2-VL Sec 3.2); sections must sum to head_dim//2.
+    """
+    inv = rope_freqs(head_dim, theta)  # [hd/2]
+    if mrope_sections is None:
+        return positions[..., None].astype(jnp.float32) * inv
+    assert positions.ndim == 3 and positions.shape[0] == 3, "M-RoPE wants [3,B,S] positions"
+    assert sum(mrope_sections) == head_dim // 2, (mrope_sections, head_dim)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(mrope_sections), total_repeat_length=head_dim // 2
+    )  # [hd/2] -> which stream feeds each freq slot
+    pos_per_slot = positions[sec_id]                      # [hd/2, B, S]
+    ang = pos_per_slot.astype(jnp.float32) * inv[:, None, None]
+    return jnp.moveaxis(ang, 0, -1)                       # [B, S, hd/2]
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, H, hd]; angles: [B, S, hd//2] -> rotated x."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "wi_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def apply_mlp(params, x, act: str, compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    g = activation(act)(xc @ params["wi_gate"].astype(compute_dtype))
+    u = xc @ params["wi_up"].astype(compute_dtype)
+    return ((g * u) @ params["wo"].astype(compute_dtype)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe

@@ -1,0 +1,151 @@
+"""Mamba2 (SSD) block — used by zamba2 and available standalone.
+
+Structure follows Mamba2: input projections -> [z | x | B | C | dt]; causal
+depthwise conv over (x, B, C); silu; SSD scan; gated RMSNorm; out_proj.
+B/C are shared across heads; A is a negative scalar per head; dt via
+softplus(dt + bias).
+
+TP note: projections are kept *separate* (w_z/w_x/w_B/w_C/w_dt) rather than
+one fused in_proj so tensor parallelism can shard the inner channel dim
+(= SSM heads) over the ``model`` mesh axis while B/C (state dim, shared
+across heads) stay replicated — the head-parallel Mamba TP layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.kernels.ssm_scan.ops import ssd_scan
+from repro.models.layers import dense_init
+
+
+def _dims(cfg: ModelConfig, d_model=None):
+    d = d_model or cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n_heads = d_in // cfg.ssm_head_dim
+    return d, d_in, n_heads
+
+
+def init_mamba2(key, cfg: ModelConfig, d_model=None):
+    d, d_in, h = _dims(cfg, d_model)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], (d, d_in)),
+        "w_x": dense_init(ks[1], (d, d_in)),
+        "w_B": dense_init(ks[2], (d, n)),
+        "w_C": dense_init(ks[3], (d, n)),
+        "w_dt": dense_init(ks[4], (d, h)),
+        "conv_x_w": dense_init(ks[5], (cfg.ssm_conv, d_in), scale=0.1),
+        "conv_x_b": jnp.zeros((d_in,), jnp.float32),
+        "conv_B_w": dense_init(ks[6], (cfg.ssm_conv, n), scale=0.1),
+        "conv_B_b": jnp.zeros((n,), jnp.float32),
+        "conv_C_w": dense_init(ks[7], (cfg.ssm_conv, n), scale=0.1),
+        "conv_C_b": jnp.zeros((n,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d)),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: [B,S,C]; w: [K,C] -> causal depthwise conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (g.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(y.dtype)
+
+
+def mamba2_forward(params, x, cfg: ModelConfig, *, backend: str = "ref",
+                   chunk: int = 64):
+    """x: [B,S,D] -> [B,S,D]."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    bsz, s, d = x.shape
+    _, d_in, h = _dims(cfg, d)
+    xc = x.astype(compute_dtype)
+    z = xc @ params["w_z"].astype(compute_dtype)
+    xs = xc @ params["w_x"].astype(compute_dtype)
+    Bm = xc @ params["w_B"].astype(compute_dtype)
+    Cm = xc @ params["w_C"].astype(compute_dtype)
+    dt_raw = xc @ params["w_dt"].astype(compute_dtype)
+
+    xs = jax.nn.silu(_causal_depthwise_conv(
+        xs.astype(jnp.float32), params["conv_x_w"], params["conv_x_b"]))
+    Bm = jax.nn.silu(_causal_depthwise_conv(
+        Bm.astype(jnp.float32), params["conv_B_w"], params["conv_B_b"]))
+    Cm = jax.nn.silu(_causal_depthwise_conv(
+        Cm.astype(jnp.float32), params["conv_C_w"], params["conv_C_b"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])      # [B,S,H]
+    A = -jnp.exp(params["A_log"])                                             # [H]
+    xh = xs.reshape(bsz, s, h, cfg.ssm_head_dim)
+    y, _ = ssd_scan(xh, dt, A, Bm, Cm, chunk=chunk, backend=backend)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_in)
+    y = _gated_norm(y, z.astype(jnp.float32), params["norm_scale"])
+    return (y.astype(compute_dtype) @ params["out_proj"].astype(compute_dtype)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, recurrent state)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, d_model=None, dtype=jnp.float32):
+    _, d_in, h = _dims(cfg, d_model)
+    n = cfg.ssm_state
+    k = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, k - 1, d_in), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, n), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, n), dtype),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), dtype),
+    }
+
+
+def _conv_step(hist, new, w, b):
+    """hist: [B,K-1,C]; new: [B,C] -> (conv output [B,C], new hist)."""
+    full = jnp.concatenate([hist, new[:, None, :].astype(hist.dtype)], axis=1)
+    out = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32), w) + b
+    return out, full[:, 1:]
+
+
+def mamba2_decode(params, x, cache, cfg: ModelConfig):
+    """x: [B,1,D] -> (y [B,1,D], new cache). O(1) in context length."""
+    compute_dtype = jnp.dtype(cfg.dtype)
+    bsz, _, d = x.shape
+    _, d_in, h = _dims(cfg, d)
+    xc = x[:, 0].astype(compute_dtype)
+    z = xc @ params["w_z"].astype(compute_dtype)
+    xs_new = xc @ params["w_x"].astype(compute_dtype)
+    B_new = xc @ params["w_B"].astype(compute_dtype)
+    C_new = xc @ params["w_C"].astype(compute_dtype)
+    dt_raw = xc @ params["w_dt"].astype(compute_dtype)
+
+    xs, conv_x = _conv_step(cache["conv_x"], xs_new, params["conv_x_w"], params["conv_x_b"])
+    Bm, conv_B = _conv_step(cache["conv_B"], B_new, params["conv_B_w"], params["conv_B_b"])
+    Cm, conv_C = _conv_step(cache["conv_C"], C_new, params["conv_C_w"], params["conv_C_b"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])      # [B,H]
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A[None, :])                                             # [B,H]
+    xh = xs.reshape(bsz, h, cfg.ssm_head_dim)
+    state = cache["ssm"].astype(jnp.float32)
+    state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", dt[..., None] * xh, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm) + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, d_in)
+    y = _gated_norm(y, z.astype(jnp.float32), params["norm_scale"])
+    y = (y.astype(compute_dtype) @ params["out_proj"].astype(compute_dtype))
+    return y[:, None, :].astype(x.dtype), {
+        "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+        "ssm": state.astype(cache["ssm"].dtype)}

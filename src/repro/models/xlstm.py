@@ -1,0 +1,307 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, truly recurrent), alternating per config.
+
+mLSTM training path uses a chunked parallel form (flash-style running
+rescale) so 32k+ sequences never materialize [S,S]:
+    d_ij = cumF_i - cumF_j + ĩ_j   (j <= i),  separable as cumF_i + b_j
+    h_i  = Σ_j (q_i·k_j/√P) e^{d_ij - m_i} v_j / max(|den_i|, e^{-m_i})
+with m_i = max_j d_ij. The recurrent decode form (C, n, m states) matches it
+exactly (validated in tests).
+
+sLSTM keeps head-wise recurrent weights R and is computed with a lax.scan
+over time (the honest sequential dependency of the architecture).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig
+from repro.models.layers import apply_norm, dense_init, init_norm
+
+log_sigmoid = jax.nn.log_sigmoid
+
+
+def _dims(cfg: ModelConfig):
+    d = cfg.d_model
+    dp = int(cfg.xlstm_proj_factor * d)
+    h = cfg.n_heads
+    p = dp // h
+    return d, dp, h, p
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d, dp, h, p = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": init_norm(cfg.norm, d),
+        "w_up": dense_init(ks[0], (d, dp)),
+        "w_gate": dense_init(ks[1], (d, dp)),
+        "wq": dense_init(ks[2], (dp, dp)),
+        "wk": dense_init(ks[3], (dp, dp)),
+        "wv": dense_init(ks[4], (dp, dp)),
+        "w_if": dense_init(ks[5], (dp, 2 * h)),  # i and f gate pre-activations
+        "gn_scale": jnp.ones((dp,), jnp.float32),
+        "w_down": dense_init(ks[7], (dp, d)),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre, *, block: int = 256):
+    """q,k,v: [B,S,H,P]; i_pre,f_pre: [B,S,H] -> h [B,S,H,P] (fp32).
+
+    Chunked two-level scan with running (m, num, den) rescaling.
+    """
+    b, s, h, p = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(p))
+    logf = log_sigmoid(f_pre.astype(jnp.float32))
+    cumf = jnp.cumsum(logf, axis=1)                        # [B,S,H]
+    bj = i_pre.astype(jnp.float32) - cumf                  # [B,S,H]
+
+    block = min(block, s)
+    nb = -(-s // block)
+    pad = nb * block - s
+
+    def pad_t(t, fill=0.0):
+        cfgpad = [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2)
+        return jnp.pad(t, cfgpad, constant_values=fill) if pad else t
+
+    # keep block operands in bf16 (halves HBM traffic of the dominant
+    # score/value reads); accumulation below stays fp32
+    blk_dtype = q.dtype if q.dtype == jnp.bfloat16 else jnp.float32
+    qc = pad_t(q).reshape(b, nb, block, h, p).astype(blk_dtype)
+    kc = pad_t(k).reshape(b, nb, block, h, p).astype(blk_dtype)
+    vc = pad_t(v).reshape(b, nb, block, h, p).astype(blk_dtype)
+    bjc = pad_t(bj, fill=-1e30).reshape(b, nb, block, h)
+    cumfc = pad_t(cumf).reshape(b, nb, block, h)
+
+    def one_q_block(qi):
+        q_blk = qc[:, qi]                                  # [B,Q,H,P]
+        cf_i = cumfc[:, qi]                                # [B,Q,H]
+        qpos = qi * block + jnp.arange(block)
+
+        # d_ij = cf_i + b_j is separable: keep everything in [B,Q,H]/[B,K,H]
+        # factors plus the unavoidable [B,H,Q,K] score matrix. A running
+        # column max (mb) keeps exp(b_j - mb) bounded.
+        def off_diag_step(carry, kj):
+            m_prev, num, den = carry
+            k_blk, v_blk, b_blk = kc[:, kj], vc[:, kj], bjc[:, kj]
+            mb = jnp.max(b_blk, axis=1)                    # [B,H]
+            m_new = jnp.maximum(m_prev, cf_i + mb[:, None, :])
+            corr = jnp.exp(m_prev - m_new)                 # [B,Q,H]
+            sc = jnp.einsum("bihp,bjhp->bhij", q_blk, k_blk) * scale
+            row = jnp.exp(cf_i - m_new + mb[:, None, :])   # [B,Q,H]
+            col = jnp.exp(b_blk - mb[:, None, :])          # [B,K,H]
+            sw = sc * jnp.moveaxis(row, 2, 1)[..., None] \
+                * jnp.moveaxis(col, 2, 1)[:, :, None, :]   # [B,H,Q,K]
+            num = num * corr[..., None] + jnp.einsum("bhij,bjhp->bihp", sw, v_blk)
+            den = den * corr + jnp.moveaxis(jnp.sum(sw, axis=-1), 1, 2)
+            return (m_new, num, den), None
+
+        m0 = jnp.full((b, block, h), -1e30, jnp.float32)
+        num0 = jnp.zeros((b, block, h, p), jnp.float32)
+        den0 = jnp.zeros((b, block, h), jnp.float32)
+        carry = (m0, num0, den0)
+        if qi > 0:
+            carry, _ = jax.lax.scan(off_diag_step, carry, jnp.arange(qi))
+
+        # diagonal block: prefix-max over j <= i
+        m_prev, num, den = carry
+        k_blk, v_blk, b_blk = kc[:, qi], vc[:, qi], bjc[:, qi]
+        cmax = jax.lax.cummax(b_blk, axis=1)               # [B,K,H] prefix max
+        m_new = jnp.maximum(m_prev, cf_i + cmax)           # row i uses cmax[i]
+        corr = jnp.exp(m_prev - m_new)
+        sc = jnp.einsum("bihp,bjhp->bhij", q_blk, k_blk) * scale
+        maskij = (jnp.arange(block)[None, :] <= jnp.arange(block)[:, None])
+        # w_ij = exp(cf_i + b_j - m_new_i); on the diagonal the exponent is
+        # bounded <= 0 because m_new_i >= cf_i + b_j for j <= i.
+        w = jnp.exp(jnp.minimum(
+            cf_i[:, :, None, :] + b_blk[:, None, :, :] - m_new[:, :, None, :],
+            0.0))
+        w = jnp.where(maskij[None, :, :, None], w, 0.0)
+        sw = sc * jnp.moveaxis(w, 3, 1)
+        num = num * corr[..., None] + jnp.einsum("bhij,bjhp->bihp", sw, v_blk)
+        den = den * corr + jnp.moveaxis(jnp.sum(sw, axis=-1), 1, 2)
+        m, num, den = m_new, num, den
+        hvec = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        return hvec
+
+    # q blocks have data-dependent inner lengths -> python loop (static nb)
+    outs = [one_q_block(qi) for qi in range(nb)]
+    out = jnp.concatenate(outs, axis=1)[:, :s]
+    return out
+
+
+def mlstm_forward(params, x, cfg: ModelConfig, *, block: int = 256):
+    d, dp, h, p = _dims(cfg)
+    compute_dtype = jnp.dtype(cfg.dtype)
+    bsz, s, _ = x.shape
+    xn = apply_norm(params["norm"], x, cfg.norm, cfg.norm_eps)
+    u = (xn.astype(compute_dtype) @ params["w_up"].astype(compute_dtype))
+    gate = (xn.astype(compute_dtype) @ params["w_gate"].astype(compute_dtype))
+    q = (u @ params["wq"].astype(compute_dtype)).reshape(bsz, s, h, p)
+    k = (u @ params["wk"].astype(compute_dtype)).reshape(bsz, s, h, p)
+    v = (u @ params["wv"].astype(compute_dtype)).reshape(bsz, s, h, p)
+    if_pre = (u @ params["w_if"].astype(compute_dtype)).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)
+    hv = _mlstm_parallel(q, k, v, i_pre, f_pre, block=block)   # [B,S,H,P] fp32
+    hv = hv.reshape(bsz, s, dp)
+    # per-head group norm
+    hg = hv.reshape(bsz, s, h, p)
+    mu = jnp.mean(hg, axis=-1, keepdims=True)
+    var = jnp.var(hg, axis=-1, keepdims=True)
+    hg = (hg - mu) * jax.lax.rsqrt(var + 1e-6)
+    hv = hg.reshape(bsz, s, dp) * params["gn_scale"]
+    out = hv.astype(compute_dtype) * jax.nn.silu(gate)
+    return x + (out @ params["w_down"].astype(compute_dtype)).astype(x.dtype)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    _, dp, h, p = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, p, p), dtype),
+        "n": jnp.zeros((batch, h, p), dtype),
+        "m": jnp.full((batch, h), -1e30, dtype),
+    }
+
+
+def mlstm_decode(params, x, cache, cfg: ModelConfig):
+    d, dp, h, p = _dims(cfg)
+    compute_dtype = jnp.dtype(cfg.dtype)
+    bsz = x.shape[0]
+    xn = apply_norm(params["norm"], x[:, 0], cfg.norm, cfg.norm_eps)
+    u = xn.astype(compute_dtype) @ params["w_up"].astype(compute_dtype)
+    gate = xn.astype(compute_dtype) @ params["w_gate"].astype(compute_dtype)
+    q = (u @ params["wq"].astype(compute_dtype)).reshape(bsz, h, p).astype(jnp.float32)
+    k = (u @ params["wk"].astype(compute_dtype)).reshape(bsz, h, p).astype(jnp.float32)
+    v = (u @ params["wv"].astype(compute_dtype)).reshape(bsz, h, p).astype(jnp.float32)
+    if_pre = (u @ params["w_if"].astype(compute_dtype)).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)              # [B,H]
+    logf = log_sigmoid(f_pre)
+    m_prev, C, n = cache["m"].astype(jnp.float32), cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32)
+    m_new = jnp.maximum(logf + m_prev, i_pre)
+    f_act = jnp.exp(logf + m_prev - m_new)
+    i_act = jnp.exp(i_pre - m_new)
+    scale = 1.0 / jnp.sqrt(jnp.float32(p))
+    C = C * f_act[..., None, None] + i_act[..., None, None] * jnp.einsum("bhp,bhq->bhpq", v, k)
+    n = n * f_act[..., None] + i_act[..., None] * k
+    num = jnp.einsum("bhpq,bhq->bhp", C, q * scale)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q * scale)), jnp.exp(-m_new))
+    hv = num / den[..., None]                                  # [B,H,P]
+    mu = jnp.mean(hv, axis=-1, keepdims=True)
+    var = jnp.var(hv, axis=-1, keepdims=True)
+    hv = (hv - mu) * jax.lax.rsqrt(var + 1e-6)
+    hv = hv.reshape(bsz, dp) * params["gn_scale"]
+    out = hv.astype(compute_dtype) * jax.nn.silu(gate)
+    out = (out @ params["w_down"].astype(compute_dtype)).astype(x.dtype)
+    new_cache = {"C": C.astype(cache["C"].dtype), "n": n.astype(cache["n"].dtype),
+                 "m": m_new.astype(cache["m"].dtype)}
+    return x + out[:, None, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d, dp, h, p = _dims(cfg)
+    ks = jax.random.split(key, 10)
+    up = int(cfg.xlstm_proj_factor * d)
+    return {
+        "norm": init_norm(cfg.norm, d),
+        "w_in": dense_init(ks[0], (d, 4 * d)),               # z,i,f,o inputs
+        "r": dense_init(ks[1], (4, cfg.n_heads, d // cfg.n_heads, d // cfg.n_heads),
+                        scale=0.02),                          # head-wise recurrent
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "w_up_gate": dense_init(ks[2], (d, up)),
+        "w_up": dense_init(ks[3], (d, up)),
+        "w_down": dense_init(ks[4], (up, d)),
+    }
+
+
+def _slstm_cell(params, xz, xi, xf, xo, state, n_heads):
+    """One time step. x*: [B, D] gate pre-activations; state: dict of [B,H,P]."""
+    h_prev, c_prev, n_prev, m_prev = state["h"], state["c"], state["n"], state["m"]
+    b, hh, p = h_prev.shape
+    r = params["r"]                                           # [4, H, P, P]
+
+    def rec(w, hp):
+        return jnp.einsum("bhp,hpq->bhq", hp, w)
+
+    z_pre = xz.reshape(b, hh, p) + rec(r[0], h_prev)
+    i_pre = xi.reshape(b, hh, p) + rec(r[1], h_prev)
+    f_pre = xf.reshape(b, hh, p) + rec(r[2], h_prev)
+    o_pre = xo.reshape(b, hh, p) + rec(r[3], h_prev)
+    z = jnp.tanh(z_pre)
+    m_new = jnp.maximum(log_sigmoid(f_pre) + m_prev, i_pre)
+    i_act = jnp.exp(i_pre - m_new)
+    f_act = jnp.exp(log_sigmoid(f_pre) + m_prev - m_new)
+    c = f_act * c_prev + i_act * z
+    n = f_act * n_prev + i_act
+    h_new = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    return {"h": h_new, "c": c, "n": n, "m": m_new}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d, _, _, _ = _dims(cfg)
+    h = cfg.n_heads
+    p = d // h
+    z = jnp.zeros((batch, h, p), dtype)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, h, p), -1e30, dtype)}
+
+
+def slstm_forward(params, x, cfg: ModelConfig, *, backend: str = "ref"):
+    """True sequential recurrence over time (fused Pallas kernel on TPU:
+    recurrent weights stay VMEM-resident across the sweep — see
+    repro/kernels/slstm_fused)."""
+    from repro.kernels.slstm_fused.ops import slstm_scan
+
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    compute_dtype = jnp.dtype(cfg.dtype)
+    bsz, s, _ = x.shape
+    xn = apply_norm(params["norm"], x, cfg.norm, cfg.norm_eps)
+    pre = (xn.astype(compute_dtype) @ params["w_in"].astype(compute_dtype)).astype(jnp.float32)
+    pre = pre + params["b"]
+    pre = pre.reshape(bsz, s, 4, h, p)                        # (z,i,f,o) blocks
+    hs = slstm_scan(pre, params["r"], backend=backend)        # [B,S,H,P]
+    hv = hs.reshape(bsz, s, d)
+    # group norm per head
+    hg = hv.reshape(bsz, s, h, d // h)
+    mu = jnp.mean(hg, axis=-1, keepdims=True)
+    var = jnp.var(hg, axis=-1, keepdims=True)
+    hv = ((hg - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(bsz, s, d) * params["gn_scale"]
+    hv = hv.astype(compute_dtype)
+    up = jax.nn.gelu(hv @ params["w_up_gate"].astype(compute_dtype)) * (
+        hv @ params["w_up"].astype(compute_dtype))
+    return x + (up @ params["w_down"].astype(compute_dtype)).astype(x.dtype)
+
+
+def slstm_decode(params, x, cache, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    compute_dtype = jnp.dtype(cfg.dtype)
+    bsz = x.shape[0]
+    xn = apply_norm(params["norm"], x[:, 0], cfg.norm, cfg.norm_eps)
+    pre = (xn.astype(compute_dtype) @ params["w_in"].astype(compute_dtype)).astype(jnp.float32)
+    pre = pre + params["b"]
+    xz, xi, xf, xo = jnp.split(pre, 4, axis=-1)
+    new_state = _slstm_cell(params, xz, xi, xf, xo,
+                            {k: v.astype(jnp.float32) for k, v in cache.items()}, h)
+    hv = new_state["h"].reshape(bsz, h, d // h)
+    mu = jnp.mean(hv, axis=-1, keepdims=True)
+    var = jnp.var(hv, axis=-1, keepdims=True)
+    hv = ((hv - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(bsz, d) * params["gn_scale"]
+    hv = hv.astype(compute_dtype)
+    up = jax.nn.gelu(hv @ params["w_up_gate"].astype(compute_dtype)) * (
+        hv @ params["w_up"].astype(compute_dtype))
+    out = (up @ params["w_down"].astype(compute_dtype)).astype(x.dtype)
+    cache_new = {k: v.astype(cache[k].dtype) for k, v in new_state.items()}
+    return x + out[:, None, :], cache_new

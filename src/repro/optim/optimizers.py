@@ -1,0 +1,124 @@
+"""Minimal pytree optimizers (no external deps): SGD(+momentum), Adam, AdamW.
+
+API mirrors the usual (init, update) pair:
+    opt = sgd(lr=0.1, momentum=0.9)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state)
+``lr`` may be a float or a schedule fn step -> float; state carries the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+LR = Union[float, Schedule]
+
+
+def _lr_at(lr: LR, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def sgd(lr: LR = 0.01, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mu"] = jax.tree.map(jnp.zeros_like, params)
+        return state
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            if nesterov:
+                upd = jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+            else:
+                upd = mu
+            new_state = {"step": step, "mu": mu}
+        else:
+            upd = grads
+            new_state = {"step": step}
+        params = jax.tree.map(lambda p, u: p - lr_t * u.astype(p.dtype), params, upd)
+        return params, new_state
+
+    return Optimizer(init, update)
+
+
+def adam(lr: LR = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            u = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u + weight_decay * p
+            return p - lr_t * u.astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: LR = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay)
+
+
+# ---------------------------------------------------------------------------
+# schedules / utilities
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.0) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def linear_schedule(base_lr: float, total_steps: int, warmup: int = 0) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        return base_lr * warm * (1 - prog)
+
+    return fn
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm

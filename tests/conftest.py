@@ -1,0 +1,28 @@
+"""Shared test config.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+single real CPU device. Multi-device tests spawn subprocesses with
+``--xla_force_host_platform_device_count`` themselves.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def run_with_devices(code: str, n_devices: int = 8) -> str:
+    """Run a python snippet in a subprocess with N host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    if out.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture
+def multi_device_runner():
+    return run_with_devices

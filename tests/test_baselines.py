@@ -1,0 +1,129 @@
+"""Baseline algorithms: semantic checks on toy problems."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import (CFLState, cfl_round, fedas_round, fedavg_round,
+                             gossip_step, local_step, oppcl_step)
+from repro.baselines.cfl import cfl_client_models
+
+
+def _toy_setup(n_clients=8, d=6, seed=0):
+    """Linear regression clients; targets differ per cluster."""
+    rng = np.random.default_rng(seed)
+    w_true = {0: rng.normal(size=d), 1: -rng.normal(size=d)}
+    xs, ys, cluster = [], [], []
+    for c in range(n_clients):
+        cl = c % 2
+        x = rng.normal(size=(32, d))
+        y = x @ w_true[cl]
+        xs.append(x)
+        ys.append(y)
+        cluster.append(cl)
+    return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+            np.array(cluster))
+
+
+def _train_fn(params, batch, key):
+    x, y = batch
+
+    def loss(p):
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    g = jax.grad(loss)(params)
+    return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+
+
+def _loss_of(params, x, y):
+    return float(jnp.mean((x @ params["w"] - y) ** 2))
+
+
+def test_fedavg_reduces_loss_iid():
+    xs, ys, cl = _toy_setup()
+    # make IID: same true w
+    ys = jnp.einsum("cnd,d->cn", xs, jnp.ones(6))
+    model = {"w": jnp.zeros(6)}
+    sizes = jnp.full((8,), 32.0)
+    l0 = np.mean([_loss_of(model, xs[c], ys[c]) for c in range(8)])
+    for r in range(30):
+        model = fedavg_round(model, (xs, ys), sizes, _train_fn,
+                             jax.random.PRNGKey(r), local_steps=2)
+    l1 = np.mean([_loss_of(model, xs[c], ys[c]) for c in range(8)])
+    assert l1 < 0.2 * l0
+
+
+def test_cfl_splits_bimodal_clients():
+    xs, ys, cl = _toy_setup()
+    state = CFLState(clusters=[np.arange(8)], models=[{"w": jnp.zeros(6)}],
+                     eps1=1e9, eps2=0.0)  # force split check every round
+    sizes = jnp.full((8,), 32.0)
+    for r in range(12):
+        state = cfl_round(state, (xs, ys), sizes, _train_fn,
+                          jax.random.PRNGKey(r), local_steps=2)
+        if len(state.clusters) > 1:
+            break
+    assert len(state.clusters) >= 2
+    # the split should separate the two ground-truth clusters
+    got = state.clusters[0]
+    purity = max(np.mean(cl[got] == 0), np.mean(cl[got] == 1))
+    assert purity >= 0.75
+    stacked = cfl_client_models(state, 8)
+    assert stacked["w"].shape == (8, 6)
+
+
+def test_fedas_keeps_personal_parts_local():
+    xs, ys, _ = _toy_setup()
+    glob = {"backbone": jnp.zeros(6), "fc2": jnp.zeros(3)}
+    clients = jax.tree.map(
+        lambda l: jnp.broadcast_to(l[None], (8,) + l.shape).copy(), glob)
+    clients["fc2"] = jnp.arange(24, dtype=jnp.float32).reshape(8, 3)
+
+    def train(params, batch, key):
+        x, y = batch
+        g = jax.grad(lambda p: jnp.mean((x @ p["backbone"] - y) ** 2))(params)
+        return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+
+    sizes = jnp.full((8,), 32.0)
+    new_glob, new_clients = fedas_round(glob, clients, (xs, ys), sizes, train,
+                                        jax.random.PRNGKey(0))
+    # fc2 (personal) unchanged per client and not pushed into global
+    np.testing.assert_allclose(np.asarray(new_clients["fc2"]),
+                               np.asarray(clients["fc2"]))
+    np.testing.assert_allclose(np.asarray(new_glob["fc2"]),
+                               np.asarray(glob["fc2"]))
+    # backbone did aggregate
+    assert float(jnp.sum(jnp.abs(new_glob["backbone"]))) > 0
+
+
+def test_gossip_and_oppcl_step():
+    xs, ys, _ = _toy_setup()
+    models = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 6))}
+    pos = jnp.array([[0.1, 0.1]] * 4 + [[0.9, 0.9]] * 4)
+    area = jnp.zeros(8, jnp.int32)
+    out_g = gossip_step(models, pos, area, (xs, ys), _train_fn,
+                        jax.random.PRNGKey(1), radius=0.05)
+    # within-group models move toward each other
+    var_before = float(jnp.var(models["w"][:4], axis=0).mean())
+    var_after = float(jnp.var(out_g["w"][:4], axis=0).mean())
+    assert var_after < var_before
+    out_o = oppcl_step(models, pos, area, (xs, ys), _train_fn,
+                       jax.random.PRNGKey(2), radius=0.05)
+    assert jax.tree.leaves(out_o)[0].shape == (8, 6)
+
+
+def test_gossip_respects_area_isolation():
+    models = {"w": jnp.stack([jnp.zeros(3), jnp.ones(3)])}
+    pos = jnp.array([[0.5, 0.5], [0.5, 0.5]])
+    area = jnp.array([0, 1], jnp.int32)  # same spot, different areas
+    out = gossip_step(models, pos, area, (jnp.zeros((2, 4, 3)), jnp.zeros((2, 4))),
+                      lambda p, b, k: p, jax.random.PRNGKey(0), radius=0.2)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(models["w"]))
+
+
+def test_local_only_moves_independently():
+    xs, ys, _ = _toy_setup()
+    models = {"w": jnp.zeros((8, 6))}
+    out = local_step(models, (xs, ys), _train_fn, jax.random.PRNGKey(0))
+    assert float(jnp.sum(jnp.abs(out["w"]))) > 0

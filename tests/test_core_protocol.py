@@ -1,0 +1,170 @@
+"""ML Mule core: freshness filter math, protocol cycles, engine equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import pairwise_mix
+from repro.core.freshness import (FreshnessConfig, accept_mask, init_freshness,
+                                  push_and_update)
+from repro.core.population import PopulationConfig, init_population, population_step
+from repro.core.protocol import (DeviceState, fixed_device_training_cycle,
+                                 mobile_device_training_cycle)
+
+
+def _linear_model(k):
+    return {"w": jax.random.normal(k, (4,))}
+
+
+def test_freshness_threshold_formula():
+    """T' = (1-a)T + a(median + b*MAD) — checked against numpy."""
+    cfg = FreshnessConfig(alpha=0.25, beta=1.5, history=8, warmup=0,
+                          init_threshold=100.0)
+    state = init_freshness(2, cfg)
+    ages = jnp.array([3.0, 5.0, 7.0, 100.0])
+    fids = jnp.array([0, 0, 0, 1], jnp.int32)
+    deliver = jnp.array([True, True, True, True])
+    new = push_and_update(state, fids, ages, deliver, cfg)
+    med = np.median([3, 5, 7])
+    mad = np.median(np.abs(np.array([3, 5, 7]) - med))
+    want0 = 0.75 * 100.0 + 0.25 * (med + 1.5 * mad)
+    np.testing.assert_allclose(float(new["threshold"][0]), want0, rtol=1e-6)
+    want1 = 0.75 * 100.0 + 0.25 * (100.0 + 1.5 * 0.0)
+    np.testing.assert_allclose(float(new["threshold"][1]), want1, rtol=1e-6)
+
+
+def test_freshness_rejects_stale_accepts_fresh():
+    cfg = FreshnessConfig(warmup=0, init_threshold=10.0)
+    state = init_freshness(1, cfg)
+    fids = jnp.array([0, 0], jnp.int32)
+    ages = jnp.array([5.0, 50.0])
+    ok = accept_mask(state, fids, ages, cfg)
+    assert bool(ok[0]) and not bool(ok[1])
+
+
+def test_warmup_accepts_everything():
+    cfg = FreshnessConfig(warmup=4, init_threshold=0.0)
+    state = init_freshness(1, cfg)
+    ok = accept_mask(state, jnp.array([0], jnp.int32), jnp.array([1e9]), cfg)
+    assert bool(ok[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(ages=st.lists(st.floats(0, 1000), min_size=1, max_size=6),
+       alpha=st.floats(0.01, 0.99), beta=st.floats(0.0, 3.0))
+def test_freshness_threshold_bounded(ages, alpha, beta):
+    """Threshold stays within [min(T0, target), max(T0, target)] — EMA
+    cannot overshoot the (median + beta*MAD) target."""
+    cfg = FreshnessConfig(alpha=alpha, beta=beta, history=8, warmup=0,
+                          init_threshold=50.0)
+    state = init_freshness(1, cfg)
+    fids = jnp.zeros((len(ages),), jnp.int32)
+    new = push_and_update(state, fids, jnp.array(ages, jnp.float32),
+                          jnp.ones((len(ages),), bool), cfg)
+    med = float(np.median(ages))
+    mad = float(np.median(np.abs(np.array(ages) - med)))
+    target = med + beta * mad
+    lo, hi = min(50.0, target) - 1e-3, max(50.0, target) + 1e-3
+    assert lo <= float(new["threshold"][0]) <= hi
+
+
+def test_protocol_cycles_match_paper_order():
+    """Fixed-device cycle trains AFTER aggregation; mobile cycle trains the
+    mule AFTER receiving the aggregate. Both stamp timestamps to t."""
+    t = jnp.float32(10.0)
+    mule = DeviceState({"w": jnp.ones(3)}, jnp.float32(4.0))
+    fixed = DeviceState({"w": jnp.zeros(3)}, jnp.float32(9.0))
+    train = lambda m: {"w": m["w"] + 100.0}
+
+    new_m, new_f, acc = fixed_device_training_cycle(
+        mule, fixed, jnp.float32(100.0), t, train, gamma=0.5)
+    assert bool(acc)
+    # f aggregated to 0.5 then trained (+100) -> 100.5; m mixes 1 and 100.5
+    np.testing.assert_allclose(np.asarray(new_f.model["w"]), 100.5)
+    np.testing.assert_allclose(np.asarray(new_m.model["w"]), 0.5 * 1 + 0.5 * 100.5)
+    assert float(new_m.ts) == 10.0 and float(new_f.ts) == 10.0
+
+    new_m, new_f, acc = mobile_device_training_cycle(
+        mule, fixed, jnp.float32(100.0), t, train, gamma=0.5)
+    np.testing.assert_allclose(np.asarray(new_f.model["w"]), 0.5)   # no train at f
+    np.testing.assert_allclose(np.asarray(new_m.model["w"]), 100.75)  # trained last
+
+
+def test_stale_model_does_not_contaminate():
+    """A rejected (stale) mule snapshot must leave the fixed model unchanged."""
+    t = jnp.float32(1000.0)
+    mule = DeviceState({"w": jnp.full(3, 77.0)}, jnp.float32(0.0))  # age 1000
+    fixed = DeviceState({"w": jnp.zeros(3)}, t)
+    new_m, new_f, acc = mobile_device_training_cycle(
+        mule, fixed, jnp.float32(10.0), t, lambda m: m, gamma=0.5)
+    assert not bool(acc)
+    np.testing.assert_allclose(np.asarray(new_f.model["w"]), 0.0)
+
+
+def test_population_step_matches_single_pair_protocol():
+    """One mule delivering to one fixed device: the vectorized engine must
+    reproduce the per-pair protocol semantics exactly (fixed-device mode)."""
+    pcfg = PopulationConfig(
+        mode="fixed", n_fixed=2, n_mules=1, gamma=0.5,
+        freshness=FreshnessConfig(warmup=0, init_threshold=1e9))
+    state = init_population(jax.random.PRNGKey(0), _linear_model, pcfg)
+    state = dict(state, t=jnp.float32(5.0))
+    train = lambda p, b, k: {"w": p["w"] + 1.0}
+    info = {"fixed_id": jnp.array([0], jnp.int32), "exchange": jnp.array([True])}
+    batches = {"fixed": jnp.zeros((2, 1)), "mule": None}
+    new = population_step(state, info, batches, train, pcfg, jax.random.PRNGKey(1))
+
+    w_m = state["mule_models"]["w"][0]
+    w_f = state["fixed_models"]["w"][0]
+    f_expected = 0.5 * w_f + 0.5 * w_m + 1.0      # aggregate then train
+    m_expected = 0.5 * w_m + 0.5 * f_expected
+    np.testing.assert_allclose(np.asarray(new["fixed_models"]["w"][0]),
+                               np.asarray(f_expected), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new["mule_models"]["w"][0]),
+                               np.asarray(m_expected), rtol=1e-6)
+    # untouched fixed device 1 must not train or move
+    np.testing.assert_allclose(np.asarray(new["fixed_models"]["w"][1]),
+                               np.asarray(state["fixed_models"]["w"][1]))
+    assert float(new["mule_ts"][0]) == 5.0
+
+
+def test_mule_carries_model_between_spaces():
+    """Space-coupled, time-decoupled transfer: a model trained at space A
+    reaches space B only via the mule (integration test of the core claim)."""
+    pcfg = PopulationConfig(
+        mode="fixed", n_fixed=2, n_mules=1, gamma=1.0,
+        freshness=FreshnessConfig(warmup=10, init_threshold=1e9))
+    state = init_population(jax.random.PRNGKey(0), _linear_model, pcfg)
+    # the mule carries a signature model (e.g. trained at space A earlier)
+    state["mule_models"]["w"] = jnp.full((1, 4), 42.0)
+    train = lambda p, b, k: p  # no training; isolate transport semantics
+    batches = {"fixed": jnp.zeros((2, 1)), "mule": None}
+
+    # step 1: corridor (no co-location) — nothing changes anywhere
+    info = {"fixed_id": jnp.array([-1], jnp.int32), "exchange": jnp.array([False])}
+    s1 = population_step(dict(state), info, batches, train, pcfg,
+                         jax.random.PRNGKey(2))
+    np.testing.assert_allclose(np.asarray(s1["fixed_models"]["w"]),
+                               np.asarray(state["fixed_models"]["w"]))
+    np.testing.assert_allclose(np.asarray(s1["mule_models"]["w"][0]), 42.0)
+
+    # step 2: mule reaches device 1 -> drops the model off (gamma=1)
+    info = {"fixed_id": jnp.array([1], jnp.int32), "exchange": jnp.array([True])}
+    s2 = population_step(s1, info, batches, train, pcfg, jax.random.PRNGKey(3))
+    np.testing.assert_allclose(np.asarray(s2["fixed_models"]["w"][1]), 42.0)
+    # device 0 never met the mule and is untouched
+    np.testing.assert_allclose(np.asarray(s2["fixed_models"]["w"][0]),
+                               np.asarray(state["fixed_models"]["w"][0]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(gamma=st.floats(0.0, 1.0), seed=st.integers(0, 1000))
+def test_pairwise_mix_convexity(gamma, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = {"w": jax.random.normal(k1, (5,))}
+    b = {"w": jax.random.normal(k2, (5,))}
+    out = pairwise_mix(a, b, gamma)["w"]
+    lo = jnp.minimum(a["w"], b["w"]) - 1e-6
+    hi = jnp.maximum(a["w"], b["w"]) + 1e-6
+    assert bool(jnp.all((out >= lo) & (out <= hi)))

@@ -1,0 +1,142 @@
+"""Data partitioners, synthetic datasets, optimizers, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
+from repro.data import (dirichlet_partition, iid_partition, make_image_dataset,
+                        make_imu_dataset, make_lm_dataset, shards_partition)
+from repro.data.partition import train_test_split
+from repro.optim import adam, clip_by_global_norm, cosine_schedule, sgd
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_image_dataset_structure():
+    x, sup, sub = make_image_dataset(0, n_per_sub=10, n_super=4, n_sub=5, size=16)
+    assert x.shape == (200, 16, 16, 3)
+    assert set(sup.tolist()) == set(range(4))
+    assert set(sub.tolist()) == set(range(20))
+    assert (sub // 5 == sup).all()          # hierarchy consistent
+
+
+def test_imu_dataset_matches_table2_sparsity():
+    x, y, loc = make_imu_dataset(0, n_per_cell=5)
+    assert x.shape[1:] == (128, 6)
+    # dance (class 2) only occurs at locations 6, 7 (paper Table 2)
+    assert set(loc[y == 2].tolist()) == {6, 7}
+    # bike repair absent from location 3
+    assert 3 not in set(loc[y == 0].tolist())
+
+
+def test_lm_dataset():
+    seqs, spaces = make_lm_dataset(0, n_seqs=4, seq_len=64, vocab=128)
+    assert seqs.shape == (4, 64) and seqs.max() < 128
+
+
+@settings(max_examples=10, deadline=None)
+@given(alpha=st.sampled_from([0.001, 0.01, 0.1, 1.0]), seed=st.integers(0, 50))
+def test_dirichlet_partition_covers_all(alpha, seed):
+    labels = np.repeat(np.arange(10), 50)
+    parts = dirichlet_partition(labels, 8, alpha, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) >= len(labels) * 0.95   # top-ups may duplicate a few
+    for p in parts:
+        assert len(p) >= 8
+
+
+def test_dirichlet_alpha_controls_concentration():
+    labels = np.repeat(np.arange(20), 100)
+
+    def mean_classes(alpha):
+        parts = dirichlet_partition(labels, 8, alpha, seed=0)
+        return np.mean([len(set(labels[p].tolist())) for p in parts])
+
+    assert mean_classes(0.001) < mean_classes(10.0)
+
+
+def test_shards_partition_paper_structure():
+    x, sup, sub = make_image_dataset(0, n_per_sub=10, n_super=20, n_sub=5)
+    out = shards_partition(sup, sub)
+    assert len(out["space_idx"]) == 8
+    a0 = set(out["area_supers"][0])
+    a1 = set(out["area_supers"][1])
+    assert len(a0) == 10 and len(a1) == 10 and not (a0 & a1)
+    # each space holds exactly one sub-class per super of its area
+    idx = out["space_idx"][(0, 2)]
+    subs_here = set(sub[idx].tolist())
+    supers_here = set(sup[idx].tolist())
+    assert supers_here == a0
+    assert len(subs_here) == 10            # one sub per super
+    # general knowledge = the 5th sub-class
+    gidx = out["general_idx"][(0, 2)]
+    assert all(s % 5 == 4 for s in sub[gidx])
+
+
+def test_train_test_split_disjoint():
+    tr, te = train_test_split(np.arange(100), 0.2, seed=1)
+    assert len(te) == 20 and not set(tr) & set(te)
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.1, momentum=0.9), adam(0.05)])
+def test_optimizers_minimize_quadratic(opt):
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(120):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(params, g, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_cosine_schedule_shape():
+    sch = cosine_schedule(1.0, 100, warmup=10)
+    assert float(sch(jnp.int32(0))) < 0.11
+    assert abs(float(sch(jnp.int32(10))) - 1.0) < 1e-5
+    assert float(sch(jnp.int32(100))) < 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), max_norm=st.floats(0.1, 10.0))
+def test_clip_by_global_norm(seed, max_norm):
+    g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (17,)) * 5}
+    clipped, norm = clip_by_global_norm(g, max_norm)
+    new_norm = float(jnp.linalg.norm(clipped["a"]))
+    assert new_norm <= max_norm * 1.001
+    if float(norm) <= max_norm:   # no-op below threshold
+        np.testing.assert_allclose(np.asarray(clipped["a"]), np.asarray(g["a"]),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layer": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "ts": jnp.array([1.0, 2.0])}
+    p = save_checkpoint(str(tmp_path), 7, tree, metadata={"mule_ts": [1, 2]})
+    assert latest_checkpoint(str(tmp_path)) == p
+    restored, meta = restore_checkpoint(p, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_allclose(np.asarray(restored["layer"]["w"]),
+                               np.asarray(tree["layer"]["w"]))
+    assert meta["step"] == 7 and meta["mule_ts"] == [1, 2]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    tree = {"w": jnp.zeros((2, 3))}
+    p = save_checkpoint(str(tmp_path), 0, tree)
+    with pytest.raises(ValueError):
+        restore_checkpoint(p, {"w": jnp.zeros((3, 3))})

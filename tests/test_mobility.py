@@ -1,0 +1,88 @@
+"""Mobility model invariants (paper Sec 4.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.mobility import (MobilityConfig, init_mobility, mobility_step,
+                            simulate_trajectories, space_of,
+                            synth_foursquare_trace, trace_to_colocation)
+
+
+def test_positions_stay_in_bounds():
+    cfg = MobilityConfig(n_mules=16, p_cross=0.5)
+    infos = simulate_trajectories(jax.random.PRNGKey(0), cfg, 200)
+    pos = np.asarray(infos["pos"])
+    assert (pos >= 0).all() and (pos <= 1).all()
+
+
+def test_p_cross_zero_never_leaves():
+    """P_cross = 0 -> devices never leave their starting space (paper)."""
+    cfg = MobilityConfig(n_mules=12, p_cross=0.0)
+    state = init_mobility(jax.random.PRNGKey(1), cfg)
+    start = np.asarray(space_of(state["pos"], cfg.space_size))
+    assert (start >= 0).all()
+    infos = simulate_trajectories(jax.random.PRNGKey(1), cfg, 300)
+    spaces = np.asarray(infos["space"])
+    for m in range(cfg.n_mules):
+        seen = set(spaces[:, m].tolist())
+        assert seen == {start[m]}, (m, seen, start[m])
+
+
+def test_higher_p_cross_more_movement():
+    def distinct_spaces(p):
+        cfg = MobilityConfig(n_mules=20, p_cross=p)
+        infos = simulate_trajectories(jax.random.PRNGKey(2), cfg, 400)
+        s = np.asarray(infos["space"])
+        return np.mean([len(set(s[:, m].tolist()) - {-1})
+                        for m in range(20)])
+    assert distinct_spaces(0.5) > distinct_spaces(0.01)
+
+
+def test_exchange_cadence():
+    """Exchanges fire exactly every `exchange_steps` consecutive co-located
+    steps — the paper's 3-step model-transfer latency."""
+    cfg = MobilityConfig(n_mules=8, p_cross=0.0, exchange_steps=3)
+    infos = simulate_trajectories(jax.random.PRNGKey(3), cfg, 30)
+    exch = np.asarray(infos["exchange"])
+    # with p_cross=0 all mules stay co-located: dwell = 1,2,3,... ->
+    # exchanges at steps where dwell % 3 == 0
+    for m in range(8):
+        fired = np.where(exch[:, m])[0]
+        assert len(fired) == 10, fired
+        assert (np.diff(fired) == 3).all()
+
+
+def test_area_isolation():
+    cfg = MobilityConfig(n_mules=10, n_areas=2, p_cross=0.5)
+    state = init_mobility(jax.random.PRNGKey(4), cfg)
+    areas0 = np.asarray(state["area"])
+    infos = simulate_trajectories(jax.random.PRNGKey(4), cfg, 100)
+    fid = np.asarray(infos["fixed_id"])
+    for m in range(10):
+        ids = fid[:, m]
+        ids = ids[ids >= 0]
+        if len(ids):
+            assert ((ids // 4) == areas0[m]).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_space_of_partition(seed):
+    """Every point is in exactly one region (space 0-3 or corridor)."""
+    pos = jax.random.uniform(jax.random.PRNGKey(seed), (100, 2))
+    sid = np.asarray(space_of(pos, 0.42))
+    assert ((sid >= -1) & (sid <= 3)).all()
+
+
+def test_trace_expansion():
+    visits = synth_foursquare_trace(0, n_users=10, n_places=8, n_steps=500)
+    assert len(visits) > 0
+    fid, exch = trace_to_colocation(visits, 10, 500, exchange_steps=3)
+    assert fid.shape == (500, 10)
+    # exchanges only while co-located
+    assert not np.any(exch & (fid < 0))
+    # transient users exist (sparsity property the paper highlights)
+    visits_per_user = np.bincount(visits[:, 0], minlength=10)
+    assert visits_per_user.min() < visits_per_user.max()
