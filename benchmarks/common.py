@@ -29,10 +29,11 @@ from repro.core.freshness import FreshnessConfig
 from repro.data import (dirichlet_partition, iid_partition, make_image_dataset,
                         make_imu_dataset, shards_partition)
 from repro.data.partition import train_test_split
-from repro.mobility import (MobilityConfig, init_mobility, mobility_step,
-                            synth_foursquare_trace, trace_to_colocation)
+from repro.mobility import synth_foursquare_trace
 from repro.models.cnn import (accuracy, cnn_forward, init_cnn, init_lstm_cnn,
                               lstm_cnn_forward, xent_loss)
+from repro.scenarios import (get_scenario, run_population, trace_colocation,
+                             walk_colocation)
 
 METHODS_FIXED = ("mlmule", "fedavg", "cfl", "fedas", "local")
 METHODS_MOBILE = ("mlmule", "gossip", "oppcl", "local", "mlmule+gossip")
@@ -63,6 +64,8 @@ class ExperimentConfig:
                                    # paper's 'accuracy stops improving' point
     freshness_off: bool = False    # ablation: disable the staleness filter
     gamma: float = 0.3
+    scenario: str = ""             # registry scenario name; overrides
+                                   # mode/dist/task/pattern when set
 
 
 # ---------------------------------------------------------------------------
@@ -189,38 +192,23 @@ def _sample_batches(key, X, Y, batch):
 # ---------------------------------------------------------------------------
 
 
-def _mobility_stream(cfg: ExperimentConfig):
-    """Yields (fixed_id [M], exchange [M], pos [M,2], area [M]) per step."""
-    if cfg.pattern == "4q":
+def _mobility_tensors(cfg: ExperimentConfig):
+    """Precomputed co-location schedule (see repro.scenarios.registry).
+
+    Returns (colocation dict with fixed_id/exchange [T, M], pos [T, M, 2],
+    area [M]; plus init_space/init_area), mule_space [M], mule_area [M].
+    """
+    if cfg.scenario:
+        co = get_scenario(cfg.scenario).colocation(cfg.seed, cfg.n_mules,
+                                                   cfg.steps)
+    elif cfg.pattern == "4q":
         visits = synth_foursquare_trace(cfg.seed, n_users=cfg.n_mules,
                                         n_places=8, n_steps=cfg.steps)
-        fid, exch = trace_to_colocation(visits, cfg.n_mules, cfg.steps)
-        pos = np.zeros((cfg.n_mules, 2), np.float32)
-        area = (fid.max(axis=0).clip(0) // 4).astype(np.int32)
-        state0 = None
-        def stream():
-            for t in range(cfg.steps):
-                yield (jnp.asarray(fid[t]), jnp.asarray(exch[t]),
-                       jnp.asarray(pos), jnp.asarray(area))
-        # initial space per mule: first visit (or 0)
-        first = np.zeros(cfg.n_mules, np.int64)
-        for m in range(cfg.n_mules):
-            v = fid[:, m][fid[:, m] >= 0]
-            first[m] = v[0] if len(v) else 0
-        return stream, first % 4, first // 4
-    mcfg = MobilityConfig(n_mules=cfg.n_mules, p_cross=float(cfg.pattern))
-    state = init_mobility(jax.random.PRNGKey(cfg.seed), mcfg)
-    from repro.mobility import space_of
-    s0 = np.asarray(space_of(state["pos"], mcfg.space_size)).clip(0)
-    a0 = np.asarray(state["area"])
-    step = jax.jit(lambda s: mobility_step(s, mcfg))
-
-    def stream():
-        s = state
-        for t in range(cfg.steps):
-            s, info = step(s)
-            yield (info["fixed_id"], info["exchange"], info["pos"], s["area"])
-    return stream, s0, a0
+        co = trace_colocation(visits, cfg.n_mules, cfg.steps)
+    else:
+        co = walk_colocation(cfg.seed, cfg.n_mules, cfg.steps,
+                             p_cross=float(cfg.pattern))
+    return co, co["init_space"], co["init_area"]
 
 
 # ---------------------------------------------------------------------------
@@ -230,8 +218,12 @@ def _mobility_stream(cfg: ExperimentConfig):
 
 def run_experiment(cfg: ExperimentConfig) -> Dict:
     t_start = time.time()
+    if cfg.scenario:
+        spec = get_scenario(cfg.scenario)
+        cfg = dataclasses.replace(cfg, mode=spec.mode, dist=spec.dist,
+                                  task=spec.task)
     init, train_fn, eval_fn = _model_fns(cfg)
-    stream_fn, mule_space, mule_area = _mobility_stream(cfg)
+    colocation, mule_space, mule_area = _mobility_tensors(cfg)
 
     if cfg.mode == "fixed":
         Xtr, Ytr, Xte, Yte = _image_data_fixed(cfg)
@@ -323,57 +315,79 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
             pop["mule_models"] = jax.tree.map(lambda l: l[home], pre_models)
         else:
             pop["mule_models"] = pre_models
-        step_pop = jax.jit(lambda s, i, b, k: population_step(
-            s, i, b, train_fn, pcfg, k))
-        jit_local = jax.jit(lambda m, b, k: local_step(m, b, train_fn, k))
-        jit_gossip = jax.jit(
-            lambda m, p, a, b, k: gossip_step(m, p, a, b, train_fn, k))
-        jit_oppcl = jax.jit(
-            lambda m, p, a, b, k: oppcl_step(m, p, a, b, train_fn, k))
-
-        last_fid = jnp.zeros((cfg.n_mules,), jnp.int32)
-        for t, (fid, exch, pos, area) in enumerate(stream_fn()):
-            key, kb, ks = jax.random.split(key, 3)
-            last_fid = jnp.where(fid >= 0, fid, last_fid)
+        def batch_fn(kb, t):
+            sampled = _sample_batches(kb, Xtr, Ytr, cfg.batch)
             if cfg.mode == "fixed":
-                batches = {"fixed": _sample_batches(kb, Xtr, Ytr, cfg.batch),
-                           "mule": None}
-            else:
-                batches = {"fixed": None,
-                           "mule": _sample_batches(kb, Xtr, Ytr, cfg.batch)}
-            if cfg.method == "local":
-                if cfg.mode == "fixed":
-                    pop["fixed_models"] = jit_local(
-                        pop["fixed_models"],
-                        _sample_batches(kb, Xtr, Ytr, cfg.batch), ks)
-                else:
-                    pop["mule_models"] = jit_local(
-                        pop["mule_models"], batches["mule"], ks)
-            elif cfg.method == "gossip":
-                # peer exchange also costs 3 time steps (paper Sec 4.3.1)
-                if t % 3 == 2:
-                    pop["mule_models"] = jit_gossip(pop["mule_models"], pos,
-                                                    area, batches["mule"], ks)
-            elif cfg.method == "oppcl":
-                if t % 3 == 2:
-                    pop["mule_models"] = jit_oppcl(pop["mule_models"], pos,
-                                                   area, batches["mule"], ks)
-            elif cfg.method in ("mlmule", "mlmule+gossip"):
-                info = {"fixed_id": fid, "exchange": exch}
-                pop = step_pop(pop, info, batches, ks)
-                if cfg.method == "mlmule+gossip" and t % 3 == 2:
-                    key, kg = jax.random.split(key)
-                    pop["mule_models"] = jit_gossip(
-                        pop["mule_models"], pos, area, batches["mule"], kg)
-            else:
-                raise ValueError(cfg.method)
+                return {"fixed": sampled, "mule": None}
+            return {"fixed": None, "mule": sampled}
 
-            if (t + 1) % cfg.eval_every == 0:
-                if cfg.mode == "fixed":
-                    acc = eval_fixed_models(pop["fixed_models"])
+        # all mobility methods draw per-step keys as fold_in(ke, t) — the
+        # engine's documented discipline — so at a fixed seed every method
+        # trains on identical batch draws and curves differ only by method
+        key, ke = jax.random.split(key)
+        if cfg.method == "mlmule":
+            # one compiled scan over the whole schedule, eval in-scan
+            if cfg.mode == "fixed":
+                eval_hook = lambda st, last: eval_v(st["fixed_models"],
+                                                    Xte, Yte)
+            else:
+                eval_hook = lambda st, last: eval_v(st["mule_models"],
+                                                    Xte[last], Yte[last])
+            pop, aux = run_population(pop, colocation, batch_fn, train_fn,
+                                      pcfg, ke, eval_every=cfg.eval_every,
+                                      eval_fn=eval_hook)
+            traces = [(int(s), float(np.mean(a))) for s, a in
+                      zip(aux["eval_steps"], np.asarray(aux["evals"]))]
+            last_fid = aux["last_fid"]
+        else:
+            step_pop = jax.jit(lambda s, i, b, k: population_step(
+                s, i, b, train_fn, pcfg, k))
+            jit_local = jax.jit(lambda m, b, k: local_step(m, b, train_fn, k))
+            jit_gossip = jax.jit(
+                lambda m, p, a, b, k: gossip_step(m, p, a, b, train_fn, k))
+            jit_oppcl = jax.jit(
+                lambda m, p, a, b, k: oppcl_step(m, p, a, b, train_fn, k))
+
+            fid_T = jnp.asarray(colocation["fixed_id"])
+            exch_T = jnp.asarray(colocation["exchange"])
+            pos_T = jnp.asarray(colocation["pos"])
+            area = jnp.asarray(colocation["area"])
+            last_fid = jnp.zeros((cfg.n_mules,), jnp.int32)
+            for t in range(cfg.steps):
+                fid, exch, pos = fid_T[t], exch_T[t], pos_T[t]
+                kb, ks = jax.random.split(jax.random.fold_in(ke, t))
+                last_fid = jnp.where(fid >= 0, fid, last_fid)
+                batches = batch_fn(kb, t)
+                if cfg.method == "local":
+                    side = "fixed_models" if cfg.mode == "fixed" else "mule_models"
+                    pop[side] = jit_local(
+                        pop[side], batches["fixed" if cfg.mode == "fixed"
+                                           else "mule"], ks)
+                elif cfg.method == "gossip":
+                    # peer exchange also costs 3 time steps (paper Sec 4.3.1)
+                    if t % 3 == 2:
+                        pop["mule_models"] = jit_gossip(
+                            pop["mule_models"], pos, area, batches["mule"], ks)
+                elif cfg.method == "oppcl":
+                    if t % 3 == 2:
+                        pop["mule_models"] = jit_oppcl(
+                            pop["mule_models"], pos, area, batches["mule"], ks)
+                elif cfg.method == "mlmule+gossip":
+                    info = {"fixed_id": fid, "exchange": exch}
+                    pop = step_pop(pop, info, batches, ks)
+                    if t % 3 == 2:
+                        kg = jax.random.fold_in(ks, 1)
+                        pop["mule_models"] = jit_gossip(
+                            pop["mule_models"], pos, area, batches["mule"], kg)
                 else:
-                    acc = eval_mobile_models(pop["mule_models"], last_fid)
-                traces.append((t, float(acc.mean())))
+                    raise ValueError(cfg.method)
+
+                if (t + 1) % cfg.eval_every == 0:
+                    if cfg.mode == "fixed":
+                        acc = eval_fixed_models(pop["fixed_models"])
+                    else:
+                        acc = eval_mobile_models(pop["mule_models"], last_fid)
+                    traces.append((t, float(acc.mean())))
         final_models = (pop["fixed_models"] if cfg.mode == "fixed"
                         else pop["mule_models"])
 

@@ -1,0 +1,98 @@
+"""Scenario-engine microbenchmark: per-step Python-loop driver vs the
+compiled ``lax.scan`` engine on the same 500-step, 20-mule workload.
+
+The loop driver is the harness's former hot path — one jitted
+``population_step`` dispatch (plus batch sampling and key splits) per time
+step. The engine compiles the whole replay into one XLA program; the gap is
+almost pure Python/jit dispatch overhead, which is what every extra scenario
+used to pay.
+
+  PYTHONPATH=src python -m benchmarks.engine_micro
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.mule_cnn import CNNConfig
+from repro.core import PopulationConfig, init_population, population_step
+from repro.models.cnn import cnn_forward, init_cnn, xent_loss
+from repro.scenarios import run_population, walk_colocation
+
+
+def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4):
+    # deliberately tiny CNN: the benchmark isolates driver overhead (Python
+    # dispatch per step), so per-step FLOPs are kept well below dispatch cost
+    mc = CNNConfig(image_size=image, conv_features=(2, 2), hidden=8,
+                   n_classes=10)
+    key = jax.random.PRNGKey(0)
+    X = jax.random.normal(key, (n_fixed, 64, image, image, 3))
+    Y = jax.random.randint(key, (n_fixed, 64), 0, 10)
+
+    def train_fn(params, b, k):
+        xb, yb = b
+        g = jax.grad(lambda p: xent_loss(cnn_forward(p, xb), yb))(params)
+        return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+
+    def batch_fn(k, t):
+        idx = jax.random.randint(k, (n_fixed, batch), 0, X.shape[1])
+        return {"fixed": (jnp.take_along_axis(
+                              X, idx[:, :, None, None, None], 1),
+                          jnp.take_along_axis(Y, idx, 1)), "mule": None}
+
+    pcfg = PopulationConfig(mode="fixed", n_fixed=n_fixed, n_mules=n_mules)
+    pop = init_population(jax.random.PRNGKey(1), lambda k: init_cnn(k, mc),
+                          pcfg)
+    co = walk_colocation(0, n_mules, steps)
+    return pop, co, batch_fn, train_fn, pcfg
+
+
+def _loop_driver(pop, co, batch_fn, train_fn, pcfg, key, steps):
+    """The former harness pattern: one jitted dispatch per simulation step."""
+    step = jax.jit(lambda s, i, b, k: population_step(
+        s, i, b, train_fn, pcfg, k))
+    fid_T = jnp.asarray(co["fixed_id"])
+    exch_T = jnp.asarray(co["exchange"])
+    for t in range(steps):
+        kb, ks = jax.random.split(jax.random.fold_in(key, t))
+        pop = step(pop, {"fixed_id": fid_T[t], "exchange": exch_T[t]},
+                   batch_fn(kb, t), ks)
+    return pop
+
+
+def run(steps: int = 500, n_mules: int = 20):
+    pop, co, batch_fn, train_fn, pcfg, = _setup(n_mules=n_mules, steps=steps)
+    key = jax.random.PRNGKey(7)
+
+    # warm up both drivers (compile), then time one full replay each
+    jax.block_until_ready(jax.tree.leaves(
+        _loop_driver(pop, co, batch_fn, train_fn, pcfg, key, 3))[0])
+    t0 = time.perf_counter()
+    out = _loop_driver(pop, co, batch_fn, train_fn, pcfg, key, steps)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    loop_s = time.perf_counter() - t0
+
+    # jit the whole replay so the timed call measures steady-state execution
+    # (an eager lax.scan re-traces + recompiles on every invocation)
+    engine = jax.jit(lambda pop, key: run_population(
+        pop, co, batch_fn, train_fn, pcfg, key)[0])
+    jax.block_until_ready(jax.tree.leaves(engine(pop, key))[0])
+    t0 = time.perf_counter()
+    jax.block_until_ready(jax.tree.leaves(engine(pop, key))[0])
+    scan_s = time.perf_counter() - t0
+
+    rows = [
+        (f"engine.loop.T{steps}", loop_s * 1e6 / steps, "us/step"),
+        (f"engine.scan.T{steps}", scan_s * 1e6 / steps, "us/step"),
+        (f"engine.speedup.T{steps}", loop_s / scan_s, "x (loop/scan)"),
+    ]
+    for name, val, derived in rows:
+        print(f"{name},{val:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -16,11 +16,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale settings (slow)")
     ap.add_argument("--only", default=None,
-                    help="comma list: kernels,proto,table1,fig6,fig8")
+                    help="comma list: kernels,engine,proto,table1,fig6,fig8")
     ap.add_argument("--outdir", default="benchmarks/results")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else [
-        "kernels", "proto", "table1", "fig6", "fig8"]
+        "kernels", "engine", "proto", "table1", "fig6", "fig8"]
     os.makedirs(args.outdir, exist_ok=True)
     results = {}
 
@@ -28,6 +28,9 @@ def main() -> None:
     if "kernels" in only:
         from benchmarks import kernels_micro
         results["kernels"] = kernels_micro.run()
+    if "engine" in only:
+        from benchmarks import engine_micro
+        results["engine"] = engine_micro.run()
     if "proto" in only:
         from benchmarks import prototype_timing
         results["proto"] = prototype_timing.run()

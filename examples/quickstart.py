@@ -5,17 +5,34 @@ procedural image task. Watch per-space accuracy improve as mules ferry model
 snapshots between spaces — no server, no always-on connectivity.
 
   PYTHONPATH=src python examples/quickstart.py
+
+Scenarios
+---------
+Mobility, protocol mode, and data partition are bundled behind string names
+in the scenario registry; the whole run is one compiled ``lax.scan``:
+
+    from repro.scenarios import SCENARIOS, get_scenario, run_population
+
+    spec = get_scenario("random_walk")      # or: commuter, foursquare_sparse,
+                                            #     shift_worker, event_crowd
+    co = spec.colocation(seed=1, n_mules=12, n_steps=240)
+    final, aux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                                eval_every=60, eval_fn=eval_hook)
+
+New workloads are one ``repro.scenarios.register(...)`` entry, and
+``examples/run_scenario.py --scenario <name>`` replays any of them
+end-to-end against the paper's harness.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.mule_cnn import CNNConfig
-from repro.core import PopulationConfig, init_population, population_step
+from repro.core import PopulationConfig, init_population
 from repro.data import dirichlet_partition, make_image_dataset
 from repro.data.partition import train_test_split
-from repro.mobility import MobilityConfig, init_mobility, mobility_step
 from repro.models.cnn import accuracy, cnn_forward, init_cnn, xent_loss
+from repro.scenarios import get_scenario, run_population
 
 F, M, STEPS = 8, 12, 240
 
@@ -41,29 +58,23 @@ def train_fn(params, batch, key):
     return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
 
 
+def batch_fn(key, t):
+    idx = jax.random.randint(key, (F, 16), 0, Xtr.shape[1])
+    return {"fixed": (jnp.take_along_axis(Xtr, idx[:, :, None, None, None], 1),
+                      jnp.take_along_axis(Ytr, idx, 1)), "mule": None}
+
+
 pcfg = PopulationConfig(mode="fixed", n_fixed=F, n_mules=M)
 pop = init_population(jax.random.PRNGKey(0), lambda k: init_cnn(k, mc), pcfg)
-mcfg = MobilityConfig(n_mules=M, p_cross=0.1)
-mob = init_mobility(jax.random.PRNGKey(1), mcfg)
 
+# --- one compiled scan over the whole scenario --------------------------------
+co = get_scenario("random_walk").colocation(1, M, STEPS)
+eval_v = jax.vmap(lambda p, xd, yd: accuracy(cnn_forward(p, xd), yd))
+pop, aux = run_population(
+    pop, co, batch_fn, train_fn, pcfg, jax.random.PRNGKey(42),
+    eval_every=60, eval_fn=lambda st, last: eval_v(st["fixed_models"], Xte, Yte))
 
-@jax.jit
-def sim_step(pop, mob, key):
-    mob, info = mobility_step(mob, mcfg)
-    kb, kt = jax.random.split(key)
-    idx = jax.random.randint(kb, (F, 16), 0, Xtr.shape[1])
-    batches = {"fixed": (jnp.take_along_axis(Xtr, idx[:, :, None, None, None], 1),
-                         jnp.take_along_axis(Ytr, idx, 1)), "mule": None}
-    return population_step(pop, info, batches, train_fn, pcfg, kt), mob
-
-
-eval_v = jax.jit(jax.vmap(lambda p, xd, yd: accuracy(cnn_forward(p, xd), yd)))
-key = jax.random.PRNGKey(42)
-for t in range(STEPS):
-    key, k = jax.random.split(key)
-    pop, mob = sim_step(pop, mob, k)
-    if (t + 1) % 60 == 0:
-        acc = np.asarray(eval_v(pop["fixed_models"], Xte, Yte))
-        print(f"step {t+1:4d}  per-space acc: {np.round(acc, 2)}  "
-              f"mean {acc.mean():.3f}")
+for t, acc in zip(aux["eval_steps"], np.asarray(aux["evals"])):
+    print(f"step {t+1:4d}  per-space acc: {np.round(acc, 2)}  "
+          f"mean {acc.mean():.3f}")
 print("done — models evolved purely through mule-carried snapshots.")

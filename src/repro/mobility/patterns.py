@@ -1,0 +1,118 @@
+"""Structured mobility patterns beyond the random walk and the sparse
+Foursquare-style trace: visit-log generators for three scenario families the
+paper's framing (opportunistic encounters with fixed smart spaces) suggests
+but does not simulate.
+
+All generators return the same visit format as ``synth_foursquare_trace`` —
+``[n_visits, 4] int64`` rows of ``(user, place, t_in, t_out)`` sorted by
+``t_in`` — so ``trace_to_colocation`` expands any of them into the ``[T, M]``
+tensors the scan engine consumes.
+
+- ``commuter_trace``     — home/work oscillation on a daily period: long
+  dwells at two anchor places per user, commute gaps in between. Dense,
+  highly periodic co-location (the easiest condition for ML Mule).
+- ``shift_worker_trace`` — crews partition the day into shifts; each crew
+  occupies its workplace only during its window and rotates workplaces
+  daily, so snapshots hop between places through shift hand-offs.
+- ``event_crowd_trace``  — sparse background visits plus scheduled events
+  that pull a large user fraction into one venue simultaneously: bursts of
+  many concurrent deliveries stress the freshness filter and aggregation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _sorted_visits(visits) -> np.ndarray:
+    if not visits:
+        return np.zeros((0, 4), np.int64)
+    arr = np.array(visits, np.int64)
+    return arr[np.argsort(arr[:, 2], kind="stable")]
+
+
+def commuter_trace(seed: int, n_users: int = 20, n_places: int = 8,
+                   n_steps: int = 2000, period: int = 200,
+                   work_frac: float = 0.45, commute: int = 5,
+                   jitter: int = 8) -> np.ndarray:
+    """Daily home->work->home cycle per user.
+
+    Each user gets a home and a distinct work place; every `period` steps it
+    dwells at home, commutes (`commute` steps off-grid), works for
+    ``work_frac * period`` steps (start jittered per user/day), and returns
+    home. Produces long dwells, so nearly every visit completes exchanges.
+    """
+    rng = np.random.default_rng(seed)
+    home = rng.integers(0, n_places, n_users)
+    work = (home + rng.integers(1, n_places, n_users)) % n_places
+    work_len = max(int(work_frac * period), 1)
+    visits = []
+    for u in range(n_users):
+        for day in range(max(n_steps // period, 1)):
+            base = day * period
+            w0 = base + commute + int(rng.integers(0, jitter + 1))
+            w1 = w0 + work_len
+            h1 = min(base + period, n_steps)
+            if base < w0 - commute:
+                visits.append((u, home[u], base, min(w0 - commute, n_steps)))
+            if w0 < n_steps:
+                visits.append((u, work[u], w0, min(w1, n_steps)))
+            if w1 + commute < h1:
+                visits.append((u, home[u], w1 + commute, h1))
+    return _sorted_visits(visits)
+
+
+def shift_worker_trace(seed: int, n_users: int = 24, n_places: int = 8,
+                       n_steps: int = 2000, n_shifts: int = 3,
+                       period: int = 240, jitter: int = 6) -> np.ndarray:
+    """Round-the-clock crews: user u works shift ``u % n_shifts``.
+
+    A day of `period` steps splits into `n_shifts` equal windows; crew s is
+    at its workplace only during window s and rotates workplace daily
+    (``(crew_base + day) % n_places``), so fixed devices see a fresh crew
+    every window and models relay across places through the rotation.
+    """
+    rng = np.random.default_rng(seed)
+    shift_of = np.arange(n_users) % n_shifts
+    crew_base = rng.integers(0, n_places, n_shifts)
+    win = period // n_shifts
+    visits = []
+    for u in range(n_users):
+        s = shift_of[u]
+        for day in range(max(n_steps // period, 1)):
+            t0 = day * period + s * win + int(rng.integers(0, jitter + 1))
+            t1 = min(day * period + (s + 1) * win, n_steps)
+            place = (crew_base[s] + day) % n_places
+            if t0 < t1:
+                visits.append((u, place, t0, t1))
+    return _sorted_visits(visits)
+
+
+def event_crowd_trace(seed: int, n_users: int = 30, n_places: int = 8,
+                      n_steps: int = 2000, n_events: int = 6,
+                      event_len: int = 60, attend: float = 0.7,
+                      background_visits: int = 3) -> np.ndarray:
+    """Sparse background check-ins punctuated by mass events.
+
+    Events are evenly spaced (start jittered); each picks one venue and an
+    ``attend`` fraction of users who all dwell there for ``event_len`` steps
+    — many simultaneous deliveries to a single fixed device.
+    """
+    rng = np.random.default_rng(seed)
+    visits = []
+    for u in range(n_users):                       # thin background traffic
+        for _ in range(int(rng.integers(1, background_visits + 1))):
+            t0 = int(rng.integers(0, max(n_steps - 10, 1)))
+            dwell = int(rng.integers(4, 20))
+            visits.append((u, int(rng.integers(0, n_places)), t0,
+                           min(t0 + dwell, n_steps)))
+    gap = max(n_steps // max(n_events, 1), event_len + 1)
+    for e in range(n_events):
+        t0 = min(e * gap + int(rng.integers(0, max(gap - event_len, 1))),
+                 max(n_steps - event_len, 0))
+        venue = int(rng.integers(0, n_places))
+        goers = rng.random(n_users) < attend
+        for u in np.nonzero(goers)[0]:
+            off = int(rng.integers(0, 5))          # staggered arrivals
+            visits.append((int(u), venue, t0 + off,
+                           min(t0 + event_len, n_steps)))
+    return _sorted_visits(visits)

@@ -53,12 +53,45 @@ def synth_foursquare_trace(seed: int, n_users: int = 40, n_places: int = 8,
 
 def trace_to_colocation(visits: np.ndarray, n_users: int, n_steps: int,
                         exchange_steps: int = 3) -> np.ndarray:
-    """Expand visits into per-step arrays.
+    """Expand visits into per-step arrays — fully vectorized.
 
     Returns (fixed_id [T, M] int32 with -1 when not co-located,
              exchange [T, M] bool — True every `exchange_steps`-th
              consecutive step of a visit).
+
+    Per-visit fill uses one flat scatter (visits stay in t_in order, so a
+    later visit overwrites an overlapping earlier one, like the reference
+    loop's slice assignment); dwell counters come from a running-maximum of
+    run-start indices instead of a per-step loop, so cost is O(T·M) numpy
+    ops, not T Python iterations. ``trace_to_colocation_loop`` is the
+    reference implementation tests compare against.
     """
+    fixed_id = -np.ones((n_steps, n_users), np.int32)
+    if len(visits):
+        u, place, t_in, t_out = (np.asarray(visits[:, i]) for i in range(4))
+        t_in = np.clip(t_in, 0, n_steps)
+        t_out = np.clip(t_out, 0, n_steps)
+        lens = np.maximum(t_out - t_in, 0)
+        # concatenated aranges: [t_in0..t_out0), [t_in1..t_out1), ...
+        offs = np.arange(lens.sum()) - np.repeat(np.cumsum(lens) - lens, lens)
+        rows = np.repeat(t_in, lens) + offs
+        fixed_id[rows, np.repeat(u, lens)] = np.repeat(place, lens)
+
+    present = fixed_id >= 0
+    prev = np.vstack([-np.ones((1, n_users), np.int32), fixed_id[:-1]])
+    run_start = present & ((fixed_id != prev) | (prev < 0))
+    t_grid = np.arange(n_steps, dtype=np.int64)[:, None]
+    start_t = np.where(run_start, t_grid, -1)
+    last_start = np.maximum.accumulate(start_t, axis=0)
+    dwell = np.where(present, t_grid - last_start + 1, 0)
+    exchange = present & (dwell % exchange_steps == 0)
+    return fixed_id, exchange
+
+
+def trace_to_colocation_loop(visits: np.ndarray, n_users: int, n_steps: int,
+                             exchange_steps: int = 3) -> np.ndarray:
+    """Reference per-step-loop implementation of ``trace_to_colocation``
+    (kept for parity tests; O(T·M) Python iterations)."""
     fixed_id = -np.ones((n_steps, n_users), np.int32)
     for u, place, t_in, t_out in visits:
         fixed_id[t_in:t_out, u] = place

@@ -1,0 +1,13 @@
+"""Scenario subsystem: registry-driven workloads on a compiled scan engine.
+
+    from repro.scenarios import get_scenario, run_population
+
+    spec = get_scenario("commuter")          # or any of list_scenarios()
+    co = spec.colocation(seed=0, n_mules=20, n_steps=500)
+    final, aux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                                eval_every=100, eval_fn=eval_hook)
+"""
+from repro.scenarios.engine import run_population  # noqa: F401
+from repro.scenarios.registry import (  # noqa: F401
+    SCENARIOS, ScenarioSpec, get_scenario, list_scenarios, register,
+    trace_colocation, walk_colocation)

@@ -1,0 +1,101 @@
+"""Compiled scenario engine: ``population_step`` under ``jax.lax.scan``.
+
+The harness used to drive the simulation with a per-step Python loop — one
+jitted dispatch per time step, thousands of dispatches per experiment. Here
+the whole run is one (optionally chunked) ``lax.scan`` over precomputed
+``[T, M]`` co-location tensors, with periodic evaluation *inside* the scan,
+so a full scenario replay is a single XLA program.
+
+Key discipline (the parity tests rely on reproducing it exactly):
+
+- step ``t`` uses ``k_t = jax.random.fold_in(key, t)``;
+- if ``batches`` is a callable ``(key, t) -> batches-dict``, the step splits
+  ``kb, ks = jax.random.split(k_t)`` and calls ``batches(kb, t)``; the
+  training key is ``ks``;
+- if ``batches`` is a pytree of stacked ``[T, ...]`` leaves, step ``t``
+  consumes slice ``t`` and trains with ``k_t`` directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.population import PopulationConfig, TrainFn, population_step
+
+
+def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
+                   batches: Any, train_fn: TrainFn, cfg: PopulationConfig,
+                   key, *, eval_every: Optional[int] = None,
+                   eval_fn: Optional[Callable[[Dict[str, Any], jnp.ndarray],
+                                              Any]] = None
+                   ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Scan ``population_step`` over a precomputed co-location schedule.
+
+    state:      population state from ``init_population``.
+    colocation: {"fixed_id": [T, M] int32 (-1 = corridor),
+                 "exchange": [T, M] bool} (extra keys ignored).
+    batches:    callable ``(key, t) -> {"fixed": ..., "mule": ...}`` sampled
+                inside the scan (traceable), or a pytree of stacked
+                ``[T, ...]`` leaves consumed as scan inputs.
+    eval_fn:    optional traceable ``(state, last_fid [M]) -> metric pytree``
+                run inside the scan every ``eval_every`` steps (``last_fid``
+                is each mule's most recent fixed device, 0 before any visit).
+
+    Returns ``(final_state, aux)`` with
+    ``aux = {"last_fid": [M], "eval_steps": np [E], "evals": stacked/None}``
+    where eval step ``i`` is taken after step ``(i+1)*eval_every - 1``.
+    """
+    fid = jnp.asarray(np.asarray(colocation["fixed_id"]), jnp.int32)
+    exch = jnp.asarray(np.asarray(colocation["exchange"]), bool)
+    n_steps, n_mules = fid.shape
+    dynamic_batches = callable(batches)
+    ts = jnp.arange(n_steps, dtype=jnp.int32)
+
+    def body(carry, xs):
+        st, last = carry
+        if dynamic_batches:
+            fid_t, exch_t, t = xs
+            kb, ks = jax.random.split(jax.random.fold_in(key, t))
+            bt = batches(kb, t)
+        else:
+            fid_t, exch_t, t, bt = xs
+            ks = jax.random.fold_in(key, t)
+        st = population_step(st, {"fixed_id": fid_t, "exchange": exch_t},
+                             bt, train_fn, cfg, ks)
+        last = jnp.where(fid_t >= 0, fid_t, last)
+        return (st, last), None
+
+    def xs_slice(lo, hi):
+        xs = (fid[lo:hi], exch[lo:hi], ts[lo:hi])
+        if not dynamic_batches:
+            xs = xs + (jax.tree.map(lambda l: l[lo:hi], batches),)
+        return xs
+
+    carry = (state, jnp.zeros((n_mules,), jnp.int32))
+
+    if eval_fn is None or not eval_every:
+        carry, _ = jax.lax.scan(body, carry, xs_slice(0, n_steps))
+        (state, last) = carry
+        return state, {"last_fid": last, "eval_steps": np.zeros((0,), int),
+                       "evals": None}
+
+    n_ev = n_steps // eval_every
+
+    def chunk(carry, xs):
+        carry, _ = jax.lax.scan(body, carry, xs)
+        st, last = carry
+        return carry, eval_fn(st, last)
+
+    head = jax.tree.map(
+        lambda l: l[: n_ev * eval_every].reshape(
+            (n_ev, eval_every) + l.shape[1:]), xs_slice(0, n_steps))
+    carry, evals = jax.lax.scan(chunk, carry, head)
+    if n_ev * eval_every < n_steps:                  # trailing partial chunk
+        carry, _ = jax.lax.scan(body, carry,
+                                xs_slice(n_ev * eval_every, n_steps))
+    (state, last) = carry
+    steps = (np.arange(n_ev) + 1) * eval_every - 1
+    return state, {"last_fid": last, "eval_steps": steps, "evals": evals}

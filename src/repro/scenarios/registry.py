@@ -1,0 +1,148 @@
+"""Scenario registry: name -> (mobility generator x protocol mode x data
+partition).
+
+A scenario bundles everything the harness needs to replay one workload:
+how mules move (a co-location schedule builder), which side trains
+(``mode``), and how data lands on devices (``dist``/``task`` strings the
+partitioners in ``benchmarks/common.py`` understand). Benchmarks and
+examples select scenarios by string — adding a workload is one
+``register()`` call, not a new driver.
+
+Co-location builders return numpy arrays:
+  fixed_id  [T, M] int32   co-located fixed device per mule (-1 = none)
+  exchange  [T, M] bool    completed-exchange flags
+  pos       [T, M, 2] f32  positions (zeros for check-in traces)
+  area      [M] int32      each mule's area (constant; areas are isolated)
+  init_space/init_area [M] initial space/area (seeds the data partition)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+from repro.mobility import (MobilityConfig, commuter_trace, event_crowd_trace,
+                            init_mobility, shift_worker_trace,
+                            simulate_trajectories, space_of,
+                            synth_foursquare_trace, trace_to_colocation)
+
+Colocation = Dict[str, np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    name: str
+    colocation: Callable[..., Colocation]   # (seed, n_mules, n_steps) -> dict
+    mode: str = "mobile"                    # which side trains (fixed|mobile)
+    dist: str = "shards"                    # data partition selector
+    task: str = "image"                     # image | har
+    description: str = ""
+
+
+SCENARIOS: Dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    SCENARIOS[spec.name] = spec
+    return spec
+
+
+def get_scenario(name: str) -> ScenarioSpec:
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"available: {', '.join(list_scenarios())}")
+    return SCENARIOS[name]
+
+
+def list_scenarios():
+    return sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# co-location builders
+# ---------------------------------------------------------------------------
+
+
+def walk_colocation(seed: int, n_mules: int, n_steps: int,
+                    p_cross: float = 0.1) -> Colocation:
+    """Unroll the random-walk mobility model into [T, M] tensors (one scan).
+
+    ``simulate_trajectories`` re-derives the same initial state from the
+    same key, so the separate ``init_mobility`` call below only recovers
+    the step-0 space/area for the data partition.
+    """
+    mcfg = MobilityConfig(n_mules=n_mules, p_cross=p_cross)
+    state = init_mobility(jax.random.PRNGKey(seed), mcfg)
+    infos = simulate_trajectories(jax.random.PRNGKey(seed), mcfg, n_steps)
+    area = np.asarray(state["area"], np.int32)
+    return {
+        "fixed_id": np.asarray(infos["fixed_id"], np.int32),
+        "exchange": np.asarray(infos["exchange"], bool),
+        "pos": np.asarray(infos["pos"], np.float32),
+        "area": area,
+        "init_space": np.asarray(space_of(state["pos"],
+                                          mcfg.space_size)).clip(0),
+        "init_area": area.copy(),
+    }
+
+
+def trace_colocation(visits: np.ndarray, n_mules: int,
+                     n_steps: int) -> Colocation:
+    """Expand a (user, place, t_in, t_out) visit log into engine tensors."""
+    fid, exch = trace_to_colocation(visits, n_mules, n_steps)
+    present = fid >= 0
+    any_visit = present.any(axis=0)
+    first_t = present.argmax(axis=0)
+    first = np.where(any_visit, fid[first_t, np.arange(n_mules)], 0)
+    return {
+        "fixed_id": fid,
+        "exchange": exch,
+        "pos": np.zeros((n_steps, n_mules, 2), np.float32),
+        "area": (fid.max(axis=0).clip(0) // 4).astype(np.int32),
+        "init_space": (first % 4).astype(np.int64),
+        "init_area": (first // 4).astype(np.int64),
+    }
+
+
+def _from_trace(gen: Callable[..., np.ndarray], **gen_kw):
+    def build(seed: int, n_mules: int, n_steps: int) -> Colocation:
+        visits = gen(seed, n_users=n_mules, n_places=8, n_steps=n_steps,
+                     **gen_kw)
+        return trace_colocation(visits, n_mules, n_steps)
+    return build
+
+
+# ---------------------------------------------------------------------------
+# built-in scenarios
+# ---------------------------------------------------------------------------
+
+register(ScenarioSpec(
+    name="random_walk", colocation=walk_colocation,
+    mode="fixed", dist="dir0.01",
+    description="Paper Sec 4.1/4.2: random walk with P_cross=0.1, smart-space "
+                "devices train on Dirichlet(0.01) partitions (Table 1)."))
+
+register(ScenarioSpec(
+    name="foursquare_sparse",
+    colocation=_from_trace(synth_foursquare_trace),
+    mode="mobile", dist="shards",
+    description="Paper '4Q' condition: sparse Foursquare-style check-ins, "
+                "mules train on shard data of their home space (Fig 6-7)."))
+
+register(ScenarioSpec(
+    name="commuter", colocation=_from_trace(commuter_trace),
+    mode="mobile", dist="shards",
+    description="Daily home/work oscillation — dense periodic co-location."))
+
+register(ScenarioSpec(
+    name="shift_worker", colocation=_from_trace(shift_worker_trace),
+    mode="mobile", dist="shards",
+    description="Rotating crews hand models across workplaces shift by shift."))
+
+register(ScenarioSpec(
+    name="event_crowd", colocation=_from_trace(event_crowd_trace),
+    mode="mobile", dist="shards",
+    description="Sparse background plus mass events: bursts of simultaneous "
+                "deliveries stress freshness filtering and aggregation."))

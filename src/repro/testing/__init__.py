@@ -1,0 +1,4 @@
+"""Test-support utilities that ship with the library (not the test tree) so
+they are importable anywhere ``repro`` is — most notably the ``hypo``
+fallback that lets the property-based tests run without ``hypothesis``."""
+from repro.testing.hypo import given, settings, strategies  # noqa: F401

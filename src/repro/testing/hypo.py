@@ -1,0 +1,91 @@
+"""Tiny, dependency-free stand-in for the slice of ``hypothesis`` the test
+suite uses.
+
+The tier-1 container does not ship ``hypothesis``; rather than skipping the
+property tests there, this module degrades ``@given`` to a fixed-seed sweep:
+each decorated test runs ``min(max_examples, CAP)`` deterministic examples
+drawn from the declared strategies with a seed derived from the test name
+and example index (stable across processes — ``zlib.crc32``, not ``hash``).
+
+Only the strategies the repo's tests use are provided: ``integers``,
+``floats``, ``lists``, ``sampled_from``, ``booleans``. CI installs the real
+``hypothesis`` and never imports this module (see the try/except at the top
+of each property-test file).
+"""
+from __future__ import annotations
+
+import random
+import zlib
+from types import SimpleNamespace
+
+_EXAMPLE_CAP = 8   # fallback keeps tier-1 fast; real hypothesis runs the full budget
+
+
+class _Strategy:
+    def __init__(self, sample_fn):
+        self._sample_fn = sample_fn
+
+    def sample(self, rng: random.Random):
+        return self._sample_fn(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def _lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+           **_kw) -> _Strategy:
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+strategies = SimpleNamespace(integers=_integers, floats=_floats,
+                             booleans=_booleans, sampled_from=_sampled_from,
+                             lists=_lists)
+
+
+def given(**strats):
+    """Run the test once per deterministic example (fixed-seed sweep).
+
+    The wrapper deliberately takes no parameters and does not set
+    ``__wrapped__`` — pytest introspects the signature for fixtures, and the
+    strategy-driven parameters must stay invisible to it.
+    """
+    def deco(fn):
+        def wrapper():
+            n = min(getattr(wrapper, "_max_examples", _EXAMPLE_CAP),
+                    _EXAMPLE_CAP)
+            for i in range(n):
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}:{i}".encode())
+                rng = random.Random(seed)
+                example = {k: s.sample(rng) for k, s in sorted(strats.items())}
+                fn(**example)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = _EXAMPLE_CAP
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _EXAMPLE_CAP, deadline=None, **_kw):
+    """Accepts (and mostly ignores) the knobs the tests pass."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

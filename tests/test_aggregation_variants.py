@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: fixed-seed fallback sweep
+    from repro.testing.hypo import given, settings, strategies as st
 
 from repro.core.aggregation import pairwise_mix, prox_mix, quality_weights
 from repro.core.freshness import FreshnessConfig

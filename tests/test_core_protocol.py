@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: fixed-seed fallback sweep
+    from repro.testing.hypo import given, settings, strategies as st
 
 from repro.core.aggregation import pairwise_mix
 from repro.core.freshness import (FreshnessConfig, accept_mask, init_freshness,

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: fixed-seed fallback sweep
+    from repro.testing.hypo import given, settings, strategies as st
 
 from repro.checkpoint import latest_checkpoint, restore_checkpoint, save_checkpoint
 from repro.data import (dirichlet_partition, iid_partition, make_image_dataset,

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: fixed-seed fallback sweep
+    from repro.testing.hypo import given, settings, strategies as st
 
 from repro.mobility import (MobilityConfig, init_mobility, mobility_step,
                             simulate_trajectories, space_of,

@@ -1,0 +1,82 @@
+"""Vectorized trace expansion: exact parity with the per-step-loop reference
+plus the paper's co-location invariants, across all trace generators."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: fixed-seed fallback sweep
+    from repro.testing.hypo import given, settings, strategies as st
+
+from repro.mobility import (commuter_trace, event_crowd_trace,
+                            shift_worker_trace, synth_foursquare_trace,
+                            trace_to_colocation, trace_to_colocation_loop)
+from repro.scenarios import SCENARIOS, get_scenario
+
+GENERATORS = [synth_foursquare_trace, commuter_trace, shift_worker_trace,
+              event_crowd_trace]
+
+
+@pytest.mark.parametrize("gen", GENERATORS, ids=lambda g: g.__name__)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_vectorized_matches_loop(gen, seed):
+    m, t = 14, 400
+    visits = gen(seed, n_users=m, n_places=8, n_steps=t)
+    fid_v, ex_v = trace_to_colocation(visits, m, t)
+    fid_l, ex_l = trace_to_colocation_loop(visits, m, t)
+    np.testing.assert_array_equal(fid_v, fid_l)
+    np.testing.assert_array_equal(ex_v, ex_l)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n_visits=st.integers(0, 60),
+       exchange_steps=st.integers(1, 5))
+def test_vectorized_matches_loop_random_visits(seed, n_visits, exchange_steps):
+    """Arbitrary (possibly overlapping, out-of-range) visit logs."""
+    m, t = 6, 80
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, m, n_visits)
+    place = rng.integers(0, 4, n_visits)
+    t_in = rng.integers(0, t, n_visits)
+    t_out = t_in + rng.integers(1, 30, n_visits)     # may exceed t
+    visits = np.stack([u, place, t_in, t_out], axis=1).astype(np.int64)
+    visits = visits[np.argsort(visits[:, 2], kind="stable")]
+    fid_v, ex_v = trace_to_colocation(visits, m, t, exchange_steps)
+    fid_l, ex_l = trace_to_colocation_loop(visits, m, t, exchange_steps)
+    np.testing.assert_array_equal(fid_v, fid_l)
+    np.testing.assert_array_equal(ex_v, ex_l)
+
+
+@pytest.mark.parametrize("gen", GENERATORS, ids=lambda g: g.__name__)
+def test_colocation_invariants(gen):
+    m, t, k = 12, 300, 3
+    visits = gen(5, n_users=m, n_places=8, n_steps=t)
+    fid, exch = trace_to_colocation(visits, m, t, exchange_steps=k)
+    assert fid.shape == (t, m) and exch.shape == (t, m)
+    # exchange => co-located
+    assert (fid[exch] >= 0).all()
+    # dwell cadence: an exchange fires exactly every k-th consecutive step
+    # of one visit (dwell counter resets on place change or absence)
+    dwell = np.zeros(m, np.int64)
+    prev = -np.ones(m, np.int32)
+    for step in range(t):
+        same = (fid[step] == prev) & (fid[step] >= 0)
+        dwell = np.where(same, dwell + 1, np.where(fid[step] >= 0, 1, 0))
+        np.testing.assert_array_equal(
+            exch[step], (dwell > 0) & (dwell % k == 0))
+        prev = fid[step]
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_registry_colocation_contract(name):
+    m, t = 10, 120
+    co = get_scenario(name).colocation(0, m, t)
+    assert co["fixed_id"].shape == (t, m)
+    assert co["exchange"].shape == (t, m) and co["exchange"].dtype == bool
+    assert co["pos"].shape == (t, m, 2)
+    for k in ("area", "init_space", "init_area"):
+        assert co[k].shape == (m,), k
+    assert (co["fixed_id"][co["exchange"]] >= 0).all()
+    assert (co["init_space"] >= 0).all() and (co["init_space"] < 4).all()
+    assert (co["exchange"] & (co["fixed_id"] >= 0)).any(), \
+        f"scenario {name} never completes an exchange"
