@@ -13,18 +13,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.baselines import (CFLState, cfl_round, fedas_round, fedavg_round,
-                             gossip_step, local_step, oppcl_step)
+from repro.baselines import CFLState, cfl_round, fedas_round, fedavg_round
 from repro.baselines.cfl import cfl_client_models
 from repro.configs.mule_cnn import CNNConfig
 from repro.configs.mule_lstm_cnn import LSTMCNNConfig
-from repro.core import PopulationConfig, init_population, population_step
+from repro.core import METHODS_MOBILE, PopulationConfig, init_population
 from repro.core.freshness import FreshnessConfig
 from repro.data import (dirichlet_partition, iid_partition, make_image_dataset,
                         make_imu_dataset, shards_partition)
@@ -32,11 +31,11 @@ from repro.data.partition import train_test_split
 from repro.mobility import synth_foursquare_trace
 from repro.models.cnn import (accuracy, cnn_forward, init_cnn, init_lstm_cnn,
                               lstm_cnn_forward, xent_loss)
-from repro.scenarios import (get_scenario, run_population, trace_colocation,
-                             walk_colocation)
+from repro.scenarios import (get_scenario, run_population, run_sweep,
+                             stack_colocations, stack_trees,
+                             trace_colocation, walk_colocation)
 
 METHODS_FIXED = ("mlmule", "fedavg", "cfl", "fedas", "local")
-METHODS_MOBILE = ("mlmule", "gossip", "oppcl", "local", "mlmule+gossip")
 
 
 @dataclasses.dataclass
@@ -187,6 +186,33 @@ def _sample_batches(key, X, Y, batch):
     return xb, yb
 
 
+def _make_pretrain(train_fn, cfg: "ExperimentConfig", n_clients: int,
+                   Xtr=None, Ytr=None):
+    """Per-device local pretraining as one ``lax.scan`` over pretrain_steps.
+
+    Preserves the former Python loop's ``split(key, 3)`` chain bitwise.
+    With ``Xtr/Ytr`` bound the result is ``(models, key) -> models``;
+    without, it is ``(models, key, Xtr, Ytr) -> models`` — the
+    data-as-argument form ``run_sweep_experiment`` vmaps over seeds.
+    """
+    def pretrain(models, key, X, Y):
+        def body(carry, _):
+            models, key = carry
+            key, kb, kt = jax.random.split(key, 3)
+            batches = _sample_batches(kb, X, Y, cfg.batch)
+            keys = jax.random.split(kt, n_clients)
+            models = jax.vmap(train_fn)(models, batches, keys)
+            return (models, key), None
+
+        (models, _), _ = jax.lax.scan(body, (models, key), None,
+                                      length=cfg.pretrain_steps)
+        return models
+
+    if Xtr is None:
+        return pretrain
+    return lambda models, key: pretrain(models, key, Xtr, Ytr)
+
+
 # ---------------------------------------------------------------------------
 # mobility stream
 # ---------------------------------------------------------------------------
@@ -239,17 +265,10 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
     eval_v = jax.jit(jax.vmap(eval_fn))
 
     # -- per-device local pretraining (paper Sec 4.2.1 / 4.3.1) --------------
-    vtrain = jax.jit(jax.vmap(train_fn))
-
-    def pretrain(models, key):
-        for i in range(cfg.pretrain_steps):
-            key, kb, kt = jax.random.split(key, 3)
-            batches = _sample_batches(kb, Xtr, Ytr, cfg.batch)
-            keys = jax.random.split(kt, jax.tree.leaves(models)[0].shape[0])
-            models = vtrain(models, batches, keys)
-        return models
-
-    pre_models = pretrain(jax.vmap(init)(
+    # one compiled lax.scan over pretrain_steps (was: one jitted dispatch per
+    # step x pretrain_steps), preserving the split(key, 3) chain bitwise
+    pretrain = _make_pretrain(train_fn, cfg, n_clients, Xtr, Ytr)
+    pre_models = jax.jit(pretrain)(jax.vmap(init)(
         jax.random.split(jax.random.PRNGKey(cfg.seed), n_clients)),
         jax.random.PRNGKey(cfg.seed + 7))
 
@@ -296,10 +315,12 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
             if (r + 1) % max(cfg.eval_every // 10, 1) == 0:
                 acc = eval_fixed_models(stacked) if cfg.mode == "fixed" else \
                     eval_mobile_models(stacked, np.arange(n_clients) % 8)
-                traces.append((r * 10, float(acc.mean())))
+                # log the post-step index (round r covers steps
+                # [r*10, (r+1)*10)), matching the mobility methods' x-axis
+                traces.append(((r + 1) * 10 - 1, float(acc.mean())))
         final_models = stacked
 
-    # ---------------- mobility-coupled methods -------------------------------
+    # ---------------- mobility-coupled methods (all on the scan engine) ------
     else:
         fresh = (FreshnessConfig(init_threshold=1e9, warmup=10**9)
                  if cfg.freshness_off else FreshnessConfig())
@@ -315,79 +336,31 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
             pop["mule_models"] = jax.tree.map(lambda l: l[home], pre_models)
         else:
             pop["mule_models"] = pre_models
+
         def batch_fn(kb, t):
             sampled = _sample_batches(kb, Xtr, Ytr, cfg.batch)
             if cfg.mode == "fixed":
                 return {"fixed": sampled, "mule": None}
             return {"fixed": None, "mule": sampled}
 
+        if cfg.mode == "fixed":
+            eval_hook = lambda st, last: eval_v(st["fixed_models"], Xte, Yte)
+        else:
+            eval_hook = lambda st, last: eval_v(st["mule_models"],
+                                                Xte[last], Yte[last])
+
         # all mobility methods draw per-step keys as fold_in(ke, t) — the
         # engine's documented discipline — so at a fixed seed every method
-        # trains on identical batch draws and curves differ only by method
+        # trains on identical batch draws and curves differ only by method;
+        # the whole schedule (method dispatch, t%3 cadences, in-scan eval)
+        # is one compiled program
         key, ke = jax.random.split(key)
-        if cfg.method == "mlmule":
-            # one compiled scan over the whole schedule, eval in-scan
-            if cfg.mode == "fixed":
-                eval_hook = lambda st, last: eval_v(st["fixed_models"],
-                                                    Xte, Yte)
-            else:
-                eval_hook = lambda st, last: eval_v(st["mule_models"],
-                                                    Xte[last], Yte[last])
-            pop, aux = run_population(pop, colocation, batch_fn, train_fn,
-                                      pcfg, ke, eval_every=cfg.eval_every,
-                                      eval_fn=eval_hook)
-            traces = [(int(s), float(np.mean(a))) for s, a in
-                      zip(aux["eval_steps"], np.asarray(aux["evals"]))]
-            last_fid = aux["last_fid"]
-        else:
-            step_pop = jax.jit(lambda s, i, b, k: population_step(
-                s, i, b, train_fn, pcfg, k))
-            jit_local = jax.jit(lambda m, b, k: local_step(m, b, train_fn, k))
-            jit_gossip = jax.jit(
-                lambda m, p, a, b, k: gossip_step(m, p, a, b, train_fn, k))
-            jit_oppcl = jax.jit(
-                lambda m, p, a, b, k: oppcl_step(m, p, a, b, train_fn, k))
-
-            fid_T = jnp.asarray(colocation["fixed_id"])
-            exch_T = jnp.asarray(colocation["exchange"])
-            pos_T = jnp.asarray(colocation["pos"])
-            area = jnp.asarray(colocation["area"])
-            last_fid = jnp.zeros((cfg.n_mules,), jnp.int32)
-            for t in range(cfg.steps):
-                fid, exch, pos = fid_T[t], exch_T[t], pos_T[t]
-                kb, ks = jax.random.split(jax.random.fold_in(ke, t))
-                last_fid = jnp.where(fid >= 0, fid, last_fid)
-                batches = batch_fn(kb, t)
-                if cfg.method == "local":
-                    side = "fixed_models" if cfg.mode == "fixed" else "mule_models"
-                    pop[side] = jit_local(
-                        pop[side], batches["fixed" if cfg.mode == "fixed"
-                                           else "mule"], ks)
-                elif cfg.method == "gossip":
-                    # peer exchange also costs 3 time steps (paper Sec 4.3.1)
-                    if t % 3 == 2:
-                        pop["mule_models"] = jit_gossip(
-                            pop["mule_models"], pos, area, batches["mule"], ks)
-                elif cfg.method == "oppcl":
-                    if t % 3 == 2:
-                        pop["mule_models"] = jit_oppcl(
-                            pop["mule_models"], pos, area, batches["mule"], ks)
-                elif cfg.method == "mlmule+gossip":
-                    info = {"fixed_id": fid, "exchange": exch}
-                    pop = step_pop(pop, info, batches, ks)
-                    if t % 3 == 2:
-                        kg = jax.random.fold_in(ks, 1)
-                        pop["mule_models"] = jit_gossip(
-                            pop["mule_models"], pos, area, batches["mule"], kg)
-                else:
-                    raise ValueError(cfg.method)
-
-                if (t + 1) % cfg.eval_every == 0:
-                    if cfg.mode == "fixed":
-                        acc = eval_fixed_models(pop["fixed_models"])
-                    else:
-                        acc = eval_mobile_models(pop["mule_models"], last_fid)
-                    traces.append((t, float(acc.mean())))
+        pop, aux = run_population(pop, colocation, batch_fn, train_fn,
+                                  pcfg, ke, eval_every=cfg.eval_every,
+                                  eval_fn=eval_hook, method=cfg.method)
+        traces = [(int(s), float(np.mean(a))) for s, a in
+                  zip(aux["eval_steps"], np.asarray(aux["evals"]))]
+        last_fid = aux["last_fid"]
         final_models = (pop["fixed_models"] if cfg.mode == "fixed"
                         else pop["mule_models"])
 
@@ -412,5 +385,148 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
         "trace": traces,
         "pre_local_acc": float(np.mean(pre)),
         "post_local_acc": float(np.mean(post)),
+        "wall_s": time.time() - t_start,
+    }
+
+
+# ---------------------------------------------------------------------------
+# batched multi-seed sweeps
+# ---------------------------------------------------------------------------
+
+
+def _stack_wrap_pad(arrs: List[np.ndarray]) -> jnp.ndarray:
+    """Stack per-seed [P, N, ...] arrays whose N varies across seeds.
+
+    Shorter pools are padded to the longest with uniformly-drawn repeats
+    (fixed rng, mirroring ``_pad_to``), so no sample is *systematically*
+    over-weighted; any individual repeat still tilts that seed's empirical
+    sampling/eval weights slightly, which is why per-seed sweep metrics
+    can differ from an unpadded ``run_experiment`` at the same seed.
+    """
+    rng = np.random.default_rng(0)
+    n = max(a.shape[1] for a in arrs)
+    out = []
+    for a in arrs:
+        a = np.asarray(a)
+        idx = np.concatenate([np.arange(a.shape[1]),
+                              rng.integers(0, a.shape[1], n - a.shape[1])])
+        out.append(a[:, idx])
+    return jnp.asarray(np.stack(out))
+
+
+def run_sweep_experiment(cfg: ExperimentConfig, seeds: Sequence[int],
+                         methods: Optional[Sequence[str]] = None) -> Dict:
+    """Seed-averaged multi-method sweep on the batched scan engine.
+
+    Builds per-seed datasets, mobility schedules, and pretrained
+    populations, stacks them on a leading seed axis, and replays every
+    requested method with ``run_sweep`` — one vmapped compiled program per
+    method instead of ``len(seeds) x len(methods)`` retraced runs. The
+    federated baselines (fedavg/cfl/fedas) are round-based and not on the
+    engine; request those through ``run_experiment``.
+
+    Returns per-method seed-stacked and seed-averaged accuracy curves on
+    the shared post-step x-axis (``eval_steps``).
+    """
+    t_start = time.time()
+    methods = list(methods or [cfg.method])
+    bad = [m for m in methods if m not in METHODS_MOBILE]
+    if bad:
+        raise ValueError(f"not engine methods: {bad}; pick from "
+                         f"{METHODS_MOBILE}")
+    if cfg.scenario:
+        spec = get_scenario(cfg.scenario)
+        cfg = dataclasses.replace(cfg, mode=spec.mode, dist=spec.dist,
+                                  task=spec.task)
+    init, train_fn, eval_fn = _model_fns(cfg)
+    n_clients = cfg.n_fixed if cfg.mode == "fixed" else cfg.n_mules
+
+    # -- per-seed assembly (numpy-level), stacked on a leading [S] axis ------
+    cos, homes, inits, pre_keys, run_keys = [], [], [], [], []
+    Xtr_l, Ytr_l, Xte_l, Yte_l = [], [], [], []
+    for s in seeds:
+        scfg = dataclasses.replace(cfg, seed=int(s))
+        co, mule_space, mule_area = _mobility_tensors(scfg)
+        if cfg.mode == "fixed":
+            Xtr, Ytr, Xte, Yte = _image_data_fixed(scfg)
+        elif cfg.task == "image":
+            Xtr, Ytr, Xte, Yte = _image_data_mobile(scfg, mule_space,
+                                                    mule_area)
+        else:
+            Xtr, Ytr, Xte, Yte = _har_data_mobile(scfg, mule_space, mule_area)
+        cos.append(co)
+        homes.append(jnp.asarray(mule_area * 4 + mule_space, jnp.int32))
+        inits.append(jax.vmap(init)(
+            jax.random.split(jax.random.PRNGKey(int(s)), n_clients)))
+        pre_keys.append(jax.random.PRNGKey(int(s) + 7))
+        # same chain run_experiment uses: ke = split(PRNGKey(seed + 100))[1]
+        run_keys.append(jax.random.split(
+            jax.random.PRNGKey(int(s) + 100))[1])
+        Xtr_l.append(Xtr)
+        Ytr_l.append(Ytr)
+        Xte_l.append(Xte)
+        Yte_l.append(Yte)
+    context = (_stack_wrap_pad(Xtr_l), _stack_wrap_pad(Ytr_l),
+               _stack_wrap_pad(Xte_l), _stack_wrap_pad(Yte_l))
+
+    # -- vmapped pretraining: one compiled scan for all seeds ----------------
+    pretrain = _make_pretrain(train_fn, cfg, n_clients)
+    pre_models = jax.jit(jax.vmap(pretrain))(
+        stack_trees(inits), stack_trees(pre_keys), context[0], context[1])
+
+    fresh = (FreshnessConfig(init_threshold=1e9, warmup=10**9)
+             if cfg.freshness_off else FreshnessConfig())
+    pcfg = PopulationConfig(mode=cfg.mode, n_fixed=cfg.n_fixed,
+                            n_mules=cfg.n_mules, gamma=cfg.gamma,
+                            freshness=fresh)
+    pops = stack_trees([init_population(jax.random.PRNGKey(int(s)), init,
+                                        pcfg) for s in seeds])
+    if cfg.mode == "fixed":
+        pops["fixed_models"] = pre_models
+        pops["mule_models"] = jax.vmap(
+            lambda pre, home: jax.tree.map(lambda l: l[home], pre))(
+                pre_models, stack_trees(homes))
+    else:
+        pops["mule_models"] = pre_models
+
+    def batch_fn(kb, t, ctx):
+        sampled = _sample_batches(kb, ctx[0], ctx[1], cfg.batch)
+        if cfg.mode == "fixed":
+            return {"fixed": sampled, "mule": None}
+        return {"fixed": None, "mule": sampled}
+
+    if cfg.mode == "fixed":
+        eval_hook = lambda st, last, ctx: jax.vmap(eval_fn)(
+            st["fixed_models"], ctx[2], ctx[3])
+    else:
+        eval_hook = lambda st, last, ctx: jax.vmap(eval_fn)(
+            st["mule_models"], ctx[2][last], ctx[3][last])
+
+    out = run_sweep(pops, stack_colocations(cos), batch_fn, train_fn, pcfg,
+                    stack_trees(run_keys), eval_every=cfg.eval_every,
+                    eval_fn=eval_hook, methods=tuple(methods),
+                    context=context)
+
+    final_eval = jax.jit(jax.vmap(eval_hook))
+    result_methods, eval_steps = {}, np.zeros((0,), int)
+    for m, (final, aux) in out.items():
+        eval_steps = aux["eval_steps"]
+        acc = (np.asarray(aux["evals"]).mean(axis=-1)
+               if aux["evals"] is not None
+               else np.zeros((len(list(seeds)), 0)))     # [S, E]
+        facc = np.asarray(final_eval(final, aux["last_fid"],
+                                     context)).mean(axis=-1)  # [S]
+        result_methods[m] = {
+            "acc": acc.tolist(),
+            "mean_acc": acc.mean(axis=0).tolist(),
+            "final_acc": facc.tolist(),
+            "mean_final_acc": float(facc.mean()),
+        }
+
+    return {
+        "config": dataclasses.asdict(cfg),
+        "seeds": [int(s) for s in seeds],
+        "eval_steps": [int(x) for x in eval_steps],
+        "methods": result_methods,
         "wall_s": time.time() - t_start,
     }

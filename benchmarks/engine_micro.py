@@ -1,29 +1,46 @@
-"""Scenario-engine microbenchmark: per-step Python-loop driver vs the
-compiled ``lax.scan`` engine on the same 500-step, 20-mule workload.
+"""Scenario-engine microbenchmarks: driver overhead and sweep throughput.
 
-The loop driver is the harness's former hot path — one jitted
-``population_step`` dispatch (plus batch sampling and key splits) per time
-step. The engine compiles the whole replay into one XLA program; the gap is
-almost pure Python/jit dispatch overhead, which is what every extra scenario
-used to pay.
+``run()`` — per-step Python-loop driver vs the compiled ``lax.scan`` engine
+on the same 500-step, 20-mule workload. The loop driver is the harness's
+former hot path — one jitted ``population_step`` dispatch (plus batch
+sampling and key splits) per time step; it survives as
+``repro.scenarios.run_population_loop``, the parity reference. The engine
+compiles the whole replay into one XLA program; the gap is almost pure
+Python/jit dispatch overhead.
 
-  PYTHONPATH=src python -m benchmarks.engine_micro
+``run_sweep_bench()`` — the multi-seed sweep path this PR targets:
+sequential ``run_population`` calls that retrace per call (the pre-cache
+behavior, reproduced by clearing the jit cache between calls) vs ONE
+vmapped compiled program over all seeds (``run_sweep``) hitting the cache.
+Also asserts the jit cache's contract: a second same-shape
+``run_population`` call performs zero retraces. Results land in
+``BENCH_sweep.json`` so the perf trajectory is tracked PR over PR.
+
+  PYTHONPATH=src python -m benchmarks.engine_micro            # both
+  PYTHONPATH=src python -m benchmarks.engine_micro --sweep    # sweep only
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.mule_cnn import CNNConfig
-from repro.core import PopulationConfig, init_population, population_step
+from repro.core import PopulationConfig, init_population
 from repro.models.cnn import cnn_forward, init_cnn, xent_loss
-from repro.scenarios import run_population, walk_colocation
+from repro.scenarios import (jit_cache_clear, jit_cache_stats,
+                             run_population, run_population_loop, run_sweep,
+                             stack_colocations, stack_trees,
+                             walk_colocation)
+
+_DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "BENCH_sweep.json")
 
 
-def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4):
+def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4, seed=0):
     # deliberately tiny CNN: the benchmark isolates driver overhead (Python
     # dispatch per step), so per-step FLOPs are kept well below dispatch cost
     mc = CNNConfig(image_size=image, conv_features=(2, 2), hidden=8,
@@ -44,45 +61,37 @@ def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4):
                           jnp.take_along_axis(Y, idx, 1)), "mule": None}
 
     pcfg = PopulationConfig(mode="fixed", n_fixed=n_fixed, n_mules=n_mules)
-    pop = init_population(jax.random.PRNGKey(1), lambda k: init_cnn(k, mc),
-                          pcfg)
-    co = walk_colocation(0, n_mules, steps)
+    pop = init_population(jax.random.PRNGKey(seed + 1),
+                          lambda k: init_cnn(k, mc), pcfg)
+    co = walk_colocation(seed, n_mules, steps)
     return pop, co, batch_fn, train_fn, pcfg
 
 
-def _loop_driver(pop, co, batch_fn, train_fn, pcfg, key, steps):
-    """The former harness pattern: one jitted dispatch per simulation step."""
-    step = jax.jit(lambda s, i, b, k: population_step(
-        s, i, b, train_fn, pcfg, k))
-    fid_T = jnp.asarray(co["fixed_id"])
-    exch_T = jnp.asarray(co["exchange"])
-    for t in range(steps):
-        kb, ks = jax.random.split(jax.random.fold_in(key, t))
-        pop = step(pop, {"fixed_id": fid_T[t], "exchange": exch_T[t]},
-                   batch_fn(kb, t), ks)
-    return pop
+def _block(tree):
+    jax.block_until_ready(jax.tree.leaves(tree)[0])
 
 
 def run(steps: int = 500, n_mules: int = 20):
-    pop, co, batch_fn, train_fn, pcfg, = _setup(n_mules=n_mules, steps=steps)
+    pop, co, batch_fn, train_fn, pcfg = _setup(n_mules=n_mules, steps=steps)
     key = jax.random.PRNGKey(7)
 
     # warm up both drivers (compile), then time one full replay each
-    jax.block_until_ready(jax.tree.leaves(
-        _loop_driver(pop, co, batch_fn, train_fn, pcfg, key, 3))[0])
+    short = {k: (v[:3] if getattr(v, "ndim", 0) > 1 and v.shape[0] == steps
+                 else v) for k, v in co.items()}
+    _block(run_population_loop(pop, short, batch_fn, train_fn, pcfg, key)[0])
     t0 = time.perf_counter()
-    out = _loop_driver(pop, co, batch_fn, train_fn, pcfg, key, steps)
-    jax.block_until_ready(jax.tree.leaves(out)[0])
+    out, _ = run_population_loop(pop, co, batch_fn, train_fn, pcfg, key)
+    _block(out)
     loop_s = time.perf_counter() - t0
 
-    # jit the whole replay so the timed call measures steady-state execution
-    # (an eager lax.scan re-traces + recompiles on every invocation)
-    engine = jax.jit(lambda pop, key: run_population(
-        pop, co, batch_fn, train_fn, pcfg, key)[0])
-    jax.block_until_ready(jax.tree.leaves(engine(pop, key))[0])
+    # first call traces + compiles and fills the cache; the timed second
+    # call is a pure cache hit measuring steady-state execution
+    jit_cache_clear()
+    _block(run_population(pop, co, batch_fn, train_fn, pcfg, key)[0])
     t0 = time.perf_counter()
-    jax.block_until_ready(jax.tree.leaves(engine(pop, key))[0])
+    _block(run_population(pop, co, batch_fn, train_fn, pcfg, key)[0])
     scan_s = time.perf_counter() - t0
+    assert jit_cache_stats()["traces"] == 1, "cached engine retraced"
 
     rows = [
         (f"engine.loop.T{steps}", loop_s * 1e6 / steps, "us/step"),
@@ -94,5 +103,81 @@ def run(steps: int = 500, n_mules: int = 20):
     return rows
 
 
+def run_sweep_bench(n_seeds: int = 8, steps: int = 300, n_mules: int = 20,
+                    out_path: str = _DEFAULT_OUT):
+    """8-seed mlmule sweep: sequential retraced vs one vmapped program."""
+    setups = [_setup(n_mules=n_mules, steps=steps, seed=s)
+              for s in range(n_seeds)]
+    _, _, batch_fn, train_fn, pcfg = setups[0]
+    keys = [jax.random.PRNGKey(1000 + s) for s in range(n_seeds)]
+
+    # -- sequential, retraced: the pre-cache engine paid one trace+compile
+    # per (seed, method) cell; clearing the cache reproduces that cost
+    t0 = time.perf_counter()
+    for (pop, co, _, _, _), key in zip(setups, keys):
+        jit_cache_clear()
+        _block(run_population(pop, co, batch_fn, train_fn, pcfg, key)[0])
+    seq_s = time.perf_counter() - t0
+
+    # -- one vmapped compiled program over all seeds (cold: includes its
+    # single trace+compile; warm: pure execution)
+    states = stack_trees([s[0] for s in setups])
+    cos = stack_colocations([s[1] for s in setups])
+    kstack = stack_trees(keys)
+    jit_cache_clear()
+    t0 = time.perf_counter()
+    _block(run_sweep(states, cos, batch_fn, train_fn, pcfg, kstack)[0])
+    vmap_cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _block(run_sweep(states, cos, batch_fn, train_fn, pcfg, kstack)[0])
+    vmap_warm_s = time.perf_counter() - t0
+
+    # -- cache contract: a second same-shape run_population call must not
+    # retrace (this is what made the sequential path slow to begin with)
+    jit_cache_clear()
+    pop, co = setups[0][0], setups[0][1]
+    _block(run_population(pop, co, batch_fn, train_fn, pcfg, keys[0])[0])
+    before = jit_cache_stats()["traces"]
+    _block(run_population(pop, co, batch_fn, train_fn, pcfg, keys[1])[0])
+    retraces = jit_cache_stats()["traces"] - before
+    assert retraces == 0, "second same-shape run_population call retraced"
+
+    speedup = seq_s / vmap_cold_s
+    rows = [
+        (f"sweep.sequential_retraced.S{n_seeds}.T{steps}", seq_s, "s total"),
+        (f"sweep.vmapped_cold.S{n_seeds}.T{steps}", vmap_cold_s, "s total"),
+        (f"sweep.vmapped_warm.S{n_seeds}.T{steps}", vmap_warm_s, "s total"),
+        (f"sweep.speedup.S{n_seeds}.T{steps}", speedup,
+         "x (sequential/vmapped-cold)"),
+        (f"sweep.retraces_second_call", retraces, "count"),
+    ]
+    for name, val, derived in rows:
+        print(f"{name},{val:.3f},{derived}")
+
+    payload = {
+        "bench": "engine_micro.run_sweep_bench",
+        "config": {"n_seeds": n_seeds, "steps": steps, "n_mules": n_mules,
+                   "method": "mlmule", "backend": jax.default_backend()},
+        "sequential_retraced_s": round(seq_s, 4),
+        "vmapped_cold_s": round(vmap_cold_s, 4),
+        "vmapped_warm_s": round(vmap_warm_s, 4),
+        "speedup_vs_sequential": round(speedup, 2),
+        "retraces_second_call": int(retraces),
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true",
+                    help="run only the sweep benchmark")
+    ap.add_argument("--out", default=_DEFAULT_OUT)
+    args = ap.parse_args()
+    if not args.sweep:
+        run()
+    run_sweep_bench(out_path=args.out)

@@ -3,29 +3,37 @@
 LSTM-CNN over procedural IMU windows whose activity-by-location density
 mirrors the paper's Table 2. Validated claim: ML Mule > Gossip/OppCL/Local
 (Local cannot extract enough features from its limited slice).
+
+Seed-averaged on the batched sweep engine: one vmapped compiled program
+per (P_cross, method) cell via ``run_sweep_experiment``.
 """
 from __future__ import annotations
 
 import json
 
-from benchmarks.common import ExperimentConfig, run_experiment
+from benchmarks.common import (METHODS_MOBILE, ExperimentConfig,
+                               run_sweep_experiment)
 
-METHODS = ("mlmule", "gossip", "oppcl", "local", "mlmule+gossip")
+METHODS = METHODS_MOBILE
 
 
-def run(full: bool = False, seed: int = 0):
+def run(full: bool = False, seeds=(0,)):
     steps = 700 if full else 200
     p_list = ["0", "0.1", "0.5"] if full else ["0.1"]
     rows = []
     for p in p_list:
+        cfg = ExperimentConfig(task="har", mode="mobile", pattern=p,
+                               steps=steps, batch=12, lr=0.03)
+        r = run_sweep_experiment(cfg, seeds, methods=METHODS)
         for method in METHODS:
-            cfg = ExperimentConfig(task="har", mode="mobile", method=method,
-                                   pattern=p, steps=steps, seed=seed,
-                                   batch=12, lr=0.03)
-            r = run_experiment(cfg)
-            rows.append({"p_cross": p, "method": method, "trace": r["trace"],
-                         "final_acc": r["pre_local_acc"], "wall_s": r["wall_s"]})
-            print(f"fig8,{p},{method},{r['pre_local_acc']:.4f}")
+            d = r["methods"][method]
+            rows.append({"p_cross": p, "method": method,
+                         "seeds": list(seeds),
+                         "trace": list(zip(r["eval_steps"], d["mean_acc"])),
+                         "acc_per_seed": d["final_acc"],
+                         "final_acc": d["mean_final_acc"],
+                         "wall_s": r["wall_s"]})
+            print(f"fig8,{p},{method},{d['mean_final_acc']:.4f}")
     return rows
 
 
@@ -33,9 +41,11 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="number of seeds (0..N-1) averaged per cell")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    rows = run(full=args.full)
+    rows = run(full=args.full, seeds=tuple(range(args.seeds)))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=1)

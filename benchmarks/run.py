@@ -2,6 +2,8 @@
 
 ``python -m benchmarks.run [--full] [--only table1,fig6,...]``
 prints ``name,us_per_call(or metric),derived`` CSV lines per benchmark.
+The ``sweep`` lane also writes ``benchmarks/BENCH_sweep.json`` (sequential
+vs vmapped sweep throughput — the artifact CI uploads).
 """
 from __future__ import annotations
 
@@ -20,7 +22,7 @@ def main() -> None:
     ap.add_argument("--outdir", default="benchmarks/results")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else [
-        "kernels", "engine", "proto", "table1", "fig6", "fig8"]
+        "kernels", "engine", "sweep", "proto", "table1", "fig6", "fig8"]
     os.makedirs(args.outdir, exist_ok=True)
     results = {}
 
@@ -31,6 +33,9 @@ def main() -> None:
     if "engine" in only:
         from benchmarks import engine_micro
         results["engine"] = engine_micro.run()
+    if "sweep" in only:
+        from benchmarks import engine_micro
+        results["sweep"] = engine_micro.run_sweep_bench()
     if "proto" in only:
         from benchmarks import prototype_timing
         results["proto"] = prototype_timing.run()

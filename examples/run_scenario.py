@@ -1,10 +1,15 @@
 """Run any registered scenario end-to-end through the paper's harness.
 
   PYTHONPATH=src python examples/run_scenario.py --scenario commuter
+  PYTHONPATH=src python examples/run_scenario.py --scenario commuter \
+      --method gossip --seeds 4          # seed-averaged, one vmapped program
   PYTHONPATH=src python examples/run_scenario.py --list
 
 The scenario supplies mobility, protocol mode, and data partition; the
 harness supplies the model, pretraining, and the compiled scan engine.
+Every mobile method (mlmule/gossip/oppcl/local/mlmule+gossip) rides the
+engine; with ``--seeds N > 1`` the replay batches all seeds into one
+vmapped compiled program (``run_sweep_experiment``).
 """
 import argparse
 import os
@@ -14,7 +19,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)                       # for `benchmarks`
 sys.path.insert(0, os.path.join(_ROOT, "src"))  # for `repro`
 
-from benchmarks.common import ExperimentConfig, run_experiment
+from benchmarks.common import (METHODS_MOBILE, ExperimentConfig,
+                               run_experiment, run_sweep_experiment)
 from repro.scenarios import SCENARIOS, list_scenarios
 
 
@@ -22,9 +28,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="random_walk",
                     choices=list_scenarios())
+    ap.add_argument("--method", default="mlmule", choices=METHODS_MOBILE)
     ap.add_argument("--steps", type=int, default=240)
     ap.add_argument("--n-mules", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="sweep seed..seed+N-1 as one vmapped program")
     ap.add_argument("--list", action="store_true",
                     help="print the registry and exit")
     args = ap.parse_args()
@@ -36,10 +45,24 @@ def main():
 
     spec = SCENARIOS[args.scenario]
     print(f"scenario={spec.name} mode={spec.mode} dist={spec.dist} "
-          f"task={spec.task}")
-    cfg = ExperimentConfig(scenario=args.scenario, method="mlmule",
+          f"task={spec.task} method={args.method}")
+    cfg = ExperimentConfig(scenario=args.scenario, method=args.method,
                            steps=args.steps, n_mules=args.n_mules,
                            seed=args.seed)
+
+    if args.seeds > 1:
+        seeds = range(args.seed, args.seed + args.seeds)
+        r = run_sweep_experiment(cfg, seeds)
+        d = r["methods"][args.method]
+        import numpy as np
+        spread = np.asarray(d["acc"]).std(axis=0)
+        for t, acc, sd in zip(r["eval_steps"], d["mean_acc"], spread):
+            print(f"  step {t+1:4d}  mean acc {acc:.3f} +/- {sd:.3f} "
+                  f"({args.seeds} seeds)")
+        print(f"final pre-local acc {d['mean_final_acc']:.3f}  "
+              f"wall {r['wall_s']:.0f}s")
+        return
+
     r = run_experiment(cfg)
     for t, acc in r["trace"]:
         print(f"  step {t+1:4d}  mean acc {acc:.3f}")

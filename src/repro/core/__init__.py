@@ -14,4 +14,6 @@
 """
 from repro.core.aggregation import masked_group_mean, pairwise_mix, weighted_average  # noqa: F401
 from repro.core.freshness import FreshnessConfig, init_freshness, push_and_update  # noqa: F401
-from repro.core.population import PopulationConfig, init_population, population_step  # noqa: F401
+from repro.core.population import (  # noqa: F401
+    METHODS_MOBILE, PopulationConfig, init_population, make_method_step,
+    population_step)

@@ -20,6 +20,15 @@ mobile-device training (share-aggregate-share-train, Fig. 2b):
 
 The Mule phase is implicit: a mule not co-located simply carries its model
 (its timestamp ages, which is what the freshness filter measures).
+
+``make_method_step`` generalizes the step to every mobile-protocol method
+the paper compares (``METHODS_MOBILE``): ML Mule above, plus the
+decentralized baselines (gossip / oppcl / local-only and the mlmule+gossip
+hybrid). All of them share one traceable signature
+``(state, info, batches, key) -> state`` so the scan engine
+(``repro.scenarios.engine``) can replay any method as a single compiled
+program; the 3-step peer-exchange cadence (paper Sec 4.3.1) is a
+``lax.cond`` on the step index carried in ``info["t"]``.
 """
 from __future__ import annotations
 
@@ -113,6 +122,87 @@ def population_step(state: Dict[str, Any], info: Dict[str, jnp.ndarray],
         "fresh": fresh,
         "t": t + 1.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# method dispatch: every mobile-protocol method as one step signature
+# ---------------------------------------------------------------------------
+
+# The five methods of the paper's mobile-device experiments (Figs 6-9).
+METHODS_MOBILE = ("mlmule", "gossip", "oppcl", "local", "mlmule+gossip")
+
+
+def make_method_step(method: str, train_fn: TrainFn, cfg: PopulationConfig,
+                     area: jnp.ndarray) -> Callable:
+    """Build a traceable one-step update for any ``METHODS_MOBILE`` method.
+
+    The returned function has the uniform signature
+    ``step(state, info, batches, key) -> state`` where ``info`` extends the
+    ``population_step`` contract with ``"pos"`` ([M, 2] mule positions) and
+    ``"t"`` (scalar int32 step index). ``area`` is the per-mule area vector
+    the peer-encounter baselines need (areas are isolated).
+
+    Method semantics (bitwise-pinned by the parity tests against
+    ``run_population_loop``):
+
+    - ``mlmule``        — ``population_step`` every step.
+    - ``local``         — the training side (per ``cfg.mode``) takes one
+                          local step; no communication, other state carried.
+    - ``gossip/oppcl``  — peer exchange costs 3 time steps (paper Sec
+                          4.3.1): the step runs only when ``t % 3 == 2``
+                          (``lax.cond``), otherwise models are carried.
+    - ``mlmule+gossip`` — ``population_step`` every step, plus a gossip
+                          exchange at the same ``t % 3 == 2`` cadence keyed
+                          with ``fold_in(key, 1)``.
+
+    Non-mlmule methods update only their model side; freshness state and
+    the protocol clock are carried unchanged, exactly like the retired
+    per-step harness loop they replace.
+    """
+    if method == "mlmule":
+        def step(st, info, batches, key):
+            return population_step(st, info, batches, train_fn, cfg, key)
+        return step
+
+    # deferred: baselines build on repro.core, so a top-level import cycles
+    from repro.baselines import gossip_step, local_step, oppcl_step
+
+    if method == "local":
+        side, bkey = (("fixed_models", "fixed") if cfg.mode == "fixed"
+                      else ("mule_models", "mule"))
+
+        def step(st, info, batches, key):
+            return {**st, side: local_step(st[side], batches[bkey],
+                                           train_fn, key)}
+        return step
+
+    if method in ("gossip", "oppcl"):
+        peer_step = gossip_step if method == "gossip" else oppcl_step
+
+        def step(st, info, batches, key):
+            def exchange(models):
+                return peer_step(models, info["pos"], area, batches["mule"],
+                                 train_fn, key)
+            models = jax.lax.cond(info["t"] % 3 == 2, exchange, lambda m: m,
+                                  st["mule_models"])
+            return {**st, "mule_models": models}
+        return step
+
+    if method == "mlmule+gossip":
+        def step(st, info, batches, key):
+            st = population_step(st, info, batches, train_fn, cfg, key)
+            kg = jax.random.fold_in(key, 1)
+
+            def exchange(models):
+                return gossip_step(models, info["pos"], area, batches["mule"],
+                                   train_fn, kg)
+            models = jax.lax.cond(info["t"] % 3 == 2, exchange, lambda m: m,
+                                  st["mule_models"])
+            return {**st, "mule_models": models}
+        return step
+
+    raise ValueError(f"unknown method {method!r}; "
+                     f"expected one of {METHODS_MOBILE}")
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,20 @@
 """Scenario subsystem: registry-driven workloads on a compiled scan engine.
 
-    from repro.scenarios import get_scenario, run_population
+    from repro.scenarios import get_scenario, run_population, run_sweep
 
     spec = get_scenario("commuter")          # or any of list_scenarios()
     co = spec.colocation(seed=0, n_mules=20, n_steps=500)
     final, aux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
-                                eval_every=100, eval_fn=eval_hook)
+                                eval_every=100, eval_fn=eval_hook,
+                                method="gossip")    # any METHODS_MOBILE
+
+Replays are jit-cached (``engine.jit_cache_stats``) and multi-seed sweeps
+vmap into one compiled program (``sweep.run_sweep``).
 """
-from repro.scenarios.engine import run_population  # noqa: F401
+from repro.scenarios.engine import (  # noqa: F401
+    jit_cache_clear, jit_cache_stats, run_population, run_population_loop)
 from repro.scenarios.registry import (  # noqa: F401
     SCENARIOS, ScenarioSpec, get_scenario, list_scenarios, register,
     trace_colocation, walk_colocation)
+from repro.scenarios.sweep import (  # noqa: F401
+    run_sweep, stack_colocations, stack_trees)

@@ -1,19 +1,50 @@
-"""Compiled scenario engine: ``population_step`` under ``jax.lax.scan``.
+"""Compiled scenario engine: method-dispatched scans with a jit cache.
 
 The harness used to drive the simulation with a per-step Python loop — one
 jitted dispatch per time step, thousands of dispatches per experiment. Here
 the whole run is one (optionally chunked) ``lax.scan`` over precomputed
 ``[T, M]`` co-location tensors, with periodic evaluation *inside* the scan,
-so a full scenario replay is a single XLA program.
+so a full scenario replay is a single XLA program. Every mobile-protocol
+method (``repro.core.population.METHODS_MOBILE``) rides the same engine:
+``method=`` selects the per-step update built by ``make_method_step`` (the
+baselines' 3-step exchange cadence is a ``lax.cond`` on the step index).
+
+Jit cache
+---------
+``run_population`` used to retrace on every call — fine for one replay per
+experiment, wasteful for sweeps. Compiled replays are now memoized in a
+module-level cache keyed on everything that determines the traced program:
+
+  (kind, method, cfg, eval_every, n_steps,
+   train_fn, eval_fn, batch-callable identity,
+   shape/dtype signatures of state, colocation tensors, stacked batches,
+   context, and the PRNG key)
+
+``cfg`` hashes by value (frozen dataclass); functions hash by identity, so
+reuse the *same* ``train_fn``/``batches``/``eval_fn`` objects across calls
+to hit the cache (a fresh lambda per call means a fresh trace). The cache
+holds strong references but is LRU-bounded (oldest entries evicted past
+``_JIT_CACHE_MAX``), so loops that can never hit — e.g. a fresh closure
+per experiment — don't accumulate executables and closure-captured data
+for process lifetime; ``jit_cache_clear()`` resets it and
+``jit_cache_stats()`` reports ``{"traces", "hits", "misses"}`` — the
+traces counter increments only when XLA actually retraces, which is what
+``benchmarks/engine_micro.py`` asserts goes to zero on repeat calls.
 
 Key discipline (the parity tests rely on reproducing it exactly):
 
 - step ``t`` uses ``k_t = jax.random.fold_in(key, t)``;
-- if ``batches`` is a callable ``(key, t) -> batches-dict``, the step splits
-  ``kb, ks = jax.random.split(k_t)`` and calls ``batches(kb, t)``; the
-  training key is ``ks``;
+- if ``batches`` is a callable ``(key, t) -> batches-dict`` (or
+  ``(key, t, context) -> batches-dict`` when a ``context`` pytree is
+  passed), the step splits ``kb, ks = jax.random.split(k_t)`` and calls
+  ``batches(kb, t[, context])``; the training key is ``ks``;
 - if ``batches`` is a pytree of stacked ``[T, ...]`` leaves, step ``t``
   consumes slice ``t`` and trains with ``k_t`` directly.
+
+``run_population_loop`` preserves the retired per-step driver verbatim as
+the parity reference (the same role ``trace_to_colocation_loop`` plays for
+the vectorized trace expansion): Python-level method dispatch, one jitted
+call per step. Tests pin scan-vs-loop bitwise equality per method.
 """
 from __future__ import annotations
 
@@ -23,79 +54,257 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.population import PopulationConfig, TrainFn, population_step
+from collections import OrderedDict
+
+from repro.core.population import (PopulationConfig, TrainFn,
+                                   make_method_step, population_step)
+
+# LRU-bounded: callers that build fresh batch/eval closures per experiment
+# (their identity is part of the key) can never hit, so eviction caps the
+# executables + closure-captured datasets such loops would otherwise leak.
+_JIT_CACHE: "OrderedDict[Any, Callable]" = OrderedDict()
+_JIT_CACHE_MAX = 32
+_STATS = {"traces": 0, "hits": 0, "misses": 0}
+
+
+def jit_cache_stats() -> Dict[str, int]:
+    """Snapshot of engine cache counters (traces/hits/misses)."""
+    return dict(_STATS)
+
+
+def jit_cache_clear() -> None:
+    """Drop all memoized replays and reset the counters."""
+    _JIT_CACHE.clear()
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+def _sig(tree: Any) -> Any:
+    """Hashable shape/dtype signature of a pytree (structure included)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (treedef,) + tuple(
+        (tuple(np.shape(l)), np.dtype(jnp.result_type(l)).str) for l in leaves)
+
+
+def _colocation_tensors(colocation, n_steps=None):
+    """Normalize a colocation dict to (fid, exch, pos, area) jnp arrays."""
+    fid = jnp.asarray(np.asarray(colocation["fixed_id"]), jnp.int32)
+    exch = jnp.asarray(np.asarray(colocation["exchange"]), bool)
+    t, m = fid.shape[-2], fid.shape[-1]
+    pos = colocation.get("pos")
+    pos = (jnp.zeros(fid.shape + (2,), jnp.float32) if pos is None
+           else jnp.asarray(np.asarray(pos), jnp.float32))
+    area = colocation.get("area")
+    area = (jnp.zeros(fid.shape[:-2] + (m,), jnp.int32) if area is None
+            else jnp.asarray(np.asarray(area), jnp.int32))
+    return fid, exch, pos, area
+
+
+def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
+                  method: str, eval_every: Optional[int],
+                  eval_fn: Optional[Callable], n_steps: int,
+                  has_context: bool) -> Callable:
+    """Un-jitted replay core ``(state, fid, exch, pos, area, stacked_batches,
+    context, key) -> (state, last_fid, evals)`` closed over the statics."""
+    dynamic = callable(batches)
+    batch_fn = batches if dynamic else None
+
+    def replay(state, fid, exch, pos, area, stacked_batches, context, key):
+        _STATS["traces"] += 1          # python side effect: fires per trace
+        step_fn = make_method_step(method, train_fn, cfg, area)
+        n_mules = fid.shape[1]
+        ts = jnp.arange(n_steps, dtype=jnp.int32)
+
+        def body(carry, xs):
+            st, last = carry
+            if dynamic:
+                fid_t, exch_t, pos_t, t = xs
+                kb, ks = jax.random.split(jax.random.fold_in(key, t))
+                bt = (batch_fn(kb, t, context) if has_context
+                      else batch_fn(kb, t))
+            else:
+                fid_t, exch_t, pos_t, t, bt = xs
+                ks = jax.random.fold_in(key, t)
+            st = step_fn(st, {"fixed_id": fid_t, "exchange": exch_t,
+                              "pos": pos_t, "t": t}, bt, ks)
+            last = jnp.where(fid_t >= 0, fid_t, last)
+            return (st, last), None
+
+        def xs_slice(lo, hi):
+            xs = (fid[lo:hi], exch[lo:hi], pos[lo:hi], ts[lo:hi])
+            if not dynamic:
+                xs = xs + (jax.tree.map(lambda l: l[lo:hi], stacked_batches),)
+            return xs
+
+        carry = (state, jnp.zeros((n_mules,), jnp.int32))
+
+        if eval_fn is None or not eval_every:
+            carry, _ = jax.lax.scan(body, carry, xs_slice(0, n_steps))
+            return carry[0], carry[1], None
+
+        ev = ((lambda st, last: eval_fn(st, last, context)) if has_context
+              else eval_fn)
+        n_ev = n_steps // eval_every
+
+        def chunk(carry, xs):
+            carry, _ = jax.lax.scan(body, carry, xs)
+            st, last = carry
+            return carry, ev(st, last)
+
+        head = jax.tree.map(
+            lambda l: l[: n_ev * eval_every].reshape(
+                (n_ev, eval_every) + l.shape[1:]), xs_slice(0, n_steps))
+        carry, evals = jax.lax.scan(chunk, carry, head)
+        if n_ev * eval_every < n_steps:              # trailing partial chunk
+            carry, _ = jax.lax.scan(body, carry,
+                                    xs_slice(n_ev * eval_every, n_steps))
+        return carry[0], carry[1], evals
+
+    return replay
+
+
+def get_compiled_replay(state, fid, exch, pos, area, batches, context, key,
+                        train_fn: TrainFn, cfg: PopulationConfig, *,
+                        method: str, eval_every: Optional[int],
+                        eval_fn: Optional[Callable],
+                        vmapped: bool = False) -> Callable:
+    """Fetch (or build + memoize) the jitted replay for this signature.
+
+    ``vmapped=True`` wraps the core in ``jax.vmap`` over a leading stack
+    axis on every array argument (``repro.scenarios.sweep`` uses this); the
+    leading-axis difference in the shape signature keeps batched and
+    unbatched programs in separate cache slots.
+    """
+    dynamic = callable(batches)
+    n_steps = int(fid.shape[-2])
+    cache_key = (
+        "sweep" if vmapped else "population", method, cfg, eval_every,
+        n_steps, train_fn, eval_fn, batches if dynamic else None,
+        _sig(state), _sig((fid, exch, pos, area)),
+        None if dynamic else _sig(batches),
+        None if context is None else _sig(context), _sig(key),
+    )
+    fn = _JIT_CACHE.get(cache_key)
+    if fn is not None:
+        _STATS["hits"] += 1
+        _JIT_CACHE.move_to_end(cache_key)
+        return fn
+    _STATS["misses"] += 1
+    core = _build_replay(batches, train_fn, cfg, method=method,
+                         eval_every=eval_every, eval_fn=eval_fn,
+                         n_steps=n_steps, has_context=context is not None)
+    if vmapped:
+        core = jax.vmap(core)
+    fn = jax.jit(core)
+    _JIT_CACHE[cache_key] = fn
+    while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+        _JIT_CACHE.popitem(last=False)
+    return fn
 
 
 def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
                    batches: Any, train_fn: TrainFn, cfg: PopulationConfig,
                    key, *, eval_every: Optional[int] = None,
-                   eval_fn: Optional[Callable[[Dict[str, Any], jnp.ndarray],
-                                              Any]] = None
+                   eval_fn: Optional[Callable] = None,
+                   method: str = "mlmule", context: Any = None
                    ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
-    """Scan ``population_step`` over a precomputed co-location schedule.
+    """Scan one method over a precomputed co-location schedule (jit-cached).
 
     state:      population state from ``init_population``.
     colocation: {"fixed_id": [T, M] int32 (-1 = corridor),
-                 "exchange": [T, M] bool} (extra keys ignored).
-    batches:    callable ``(key, t) -> {"fixed": ..., "mule": ...}`` sampled
-                inside the scan (traceable), or a pytree of stacked
-                ``[T, ...]`` leaves consumed as scan inputs.
-    eval_fn:    optional traceable ``(state, last_fid [M]) -> metric pytree``
-                run inside the scan every ``eval_every`` steps (``last_fid``
-                is each mule's most recent fixed device, 0 before any visit).
+                 "exchange": [T, M] bool}; the peer-encounter methods also
+                 read "pos" [T, M, 2] and "area" [M] (zero-filled when
+                 absent; extra keys ignored).
+    batches:    callable ``(key, t[, context]) -> {"fixed": ..., "mule":
+                ...}`` sampled inside the scan (traceable), or a pytree of
+                stacked ``[T, ...]`` leaves consumed as scan inputs.
+    method:     any of ``METHODS_MOBILE`` (see ``make_method_step``).
+    context:    optional pytree passed through to ``batches`` and
+                ``eval_fn`` as a trailing argument — the hook for per-call
+                (or, under ``run_sweep``, per-seed) datasets.
+    eval_fn:    optional traceable ``(state, last_fid [M][, context]) ->
+                metric pytree`` run inside the scan every ``eval_every``
+                steps (``last_fid`` is each mule's most recent fixed
+                device, 0 before any visit).
 
     Returns ``(final_state, aux)`` with
     ``aux = {"last_fid": [M], "eval_steps": np [E], "evals": stacked/None}``
     where eval step ``i`` is taken after step ``(i+1)*eval_every - 1``.
     """
-    fid = jnp.asarray(np.asarray(colocation["fixed_id"]), jnp.int32)
-    exch = jnp.asarray(np.asarray(colocation["exchange"]), bool)
-    n_steps, n_mules = fid.shape
-    dynamic_batches = callable(batches)
-    ts = jnp.arange(n_steps, dtype=jnp.int32)
+    fid, exch, pos, area = _colocation_tensors(colocation)
+    n_steps = fid.shape[0]
+    stacked = None if callable(batches) else batches
+    fn = get_compiled_replay(state, fid, exch, pos, area, batches, context,
+                             key, train_fn, cfg, method=method,
+                             eval_every=eval_every, eval_fn=eval_fn)
+    state, last, evals = fn(state, fid, exch, pos, area, stacked, context,
+                            key)
+    n_ev = n_steps // eval_every if (eval_fn is not None and eval_every) else 0
+    steps = (np.arange(n_ev) + 1) * eval_every - 1 if n_ev else \
+        np.zeros((0,), int)
+    return state, {"last_fid": last, "eval_steps": steps, "evals": evals}
 
-    def body(carry, xs):
-        st, last = carry
-        if dynamic_batches:
-            fid_t, exch_t, t = xs
+
+def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
+                        batches: Any, train_fn: TrainFn,
+                        cfg: PopulationConfig, key, *,
+                        method: str = "mlmule"
+                        ) -> Tuple[Dict[str, Any], jnp.ndarray]:
+    """The retired per-step harness driver, kept as the parity reference.
+
+    One jitted dispatch per simulation step with Python-level method
+    branching — exactly the loop ``benchmarks/common.py`` ran before every
+    method moved onto the scan. Parity tests pin ``run_population`` to this
+    bitwise at fixed seed; ``benchmarks/engine_micro.py`` times the gap.
+
+    Returns ``(final_state, last_fid)``.
+    """
+    from repro.baselines import gossip_step, local_step, oppcl_step
+
+    step = jax.jit(lambda s, i, b, k: population_step(s, i, b, train_fn,
+                                                      cfg, k))
+    jit_local = jax.jit(lambda m, b, k: local_step(m, b, train_fn, k))
+    jit_gossip = jax.jit(
+        lambda m, p, a, b, k: gossip_step(m, p, a, b, train_fn, k))
+    jit_oppcl = jax.jit(
+        lambda m, p, a, b, k: oppcl_step(m, p, a, b, train_fn, k))
+
+    fid_T, exch_T, pos_T, area = _colocation_tensors(colocation)
+    n_steps, n_mules = fid_T.shape
+    dynamic = callable(batches)
+    state = dict(state)
+    last_fid = jnp.zeros((n_mules,), jnp.int32)
+    for t in range(n_steps):
+        fid, exch, pos = fid_T[t], exch_T[t], pos_T[t]
+        if dynamic:
             kb, ks = jax.random.split(jax.random.fold_in(key, t))
             bt = batches(kb, t)
         else:
-            fid_t, exch_t, t, bt = xs
             ks = jax.random.fold_in(key, t)
-        st = population_step(st, {"fixed_id": fid_t, "exchange": exch_t},
-                             bt, train_fn, cfg, ks)
-        last = jnp.where(fid_t >= 0, fid_t, last)
-        return (st, last), None
-
-    def xs_slice(lo, hi):
-        xs = (fid[lo:hi], exch[lo:hi], ts[lo:hi])
-        if not dynamic_batches:
-            xs = xs + (jax.tree.map(lambda l: l[lo:hi], batches),)
-        return xs
-
-    carry = (state, jnp.zeros((n_mules,), jnp.int32))
-
-    if eval_fn is None or not eval_every:
-        carry, _ = jax.lax.scan(body, carry, xs_slice(0, n_steps))
-        (state, last) = carry
-        return state, {"last_fid": last, "eval_steps": np.zeros((0,), int),
-                       "evals": None}
-
-    n_ev = n_steps // eval_every
-
-    def chunk(carry, xs):
-        carry, _ = jax.lax.scan(body, carry, xs)
-        st, last = carry
-        return carry, eval_fn(st, last)
-
-    head = jax.tree.map(
-        lambda l: l[: n_ev * eval_every].reshape(
-            (n_ev, eval_every) + l.shape[1:]), xs_slice(0, n_steps))
-    carry, evals = jax.lax.scan(chunk, carry, head)
-    if n_ev * eval_every < n_steps:                  # trailing partial chunk
-        carry, _ = jax.lax.scan(body, carry,
-                                xs_slice(n_ev * eval_every, n_steps))
-    (state, last) = carry
-    steps = (np.arange(n_ev) + 1) * eval_every - 1
-    return state, {"last_fid": last, "eval_steps": steps, "evals": evals}
+            bt = jax.tree.map(lambda l: l[t], batches)
+        last_fid = jnp.where(fid >= 0, fid, last_fid)
+        if method == "mlmule":
+            state = step(state, {"fixed_id": fid, "exchange": exch}, bt, ks)
+        elif method == "local":
+            side = "fixed_models" if cfg.mode == "fixed" else "mule_models"
+            state[side] = jit_local(
+                state[side], bt["fixed" if cfg.mode == "fixed" else "mule"],
+                ks)
+        elif method == "gossip":
+            # peer exchange also costs 3 time steps (paper Sec 4.3.1)
+            if t % 3 == 2:
+                state["mule_models"] = jit_gossip(
+                    state["mule_models"], pos, area, bt["mule"], ks)
+        elif method == "oppcl":
+            if t % 3 == 2:
+                state["mule_models"] = jit_oppcl(
+                    state["mule_models"], pos, area, bt["mule"], ks)
+        elif method == "mlmule+gossip":
+            state = step(state, {"fixed_id": fid, "exchange": exch}, bt, ks)
+            if t % 3 == 2:
+                kg = jax.random.fold_in(ks, 1)
+                state["mule_models"] = jit_gossip(
+                    state["mule_models"], pos, area, bt["mule"], kg)
+        else:
+            raise ValueError(method)
+    return state, last_fid

@@ -1,0 +1,107 @@
+"""Batched sweeps: one vmapped compiled replay per (method, shape) cell.
+
+The paper's headline results (Figs 6-9, Table 1) are seed-averaged curves
+across five methods. Running them as S x 5 independent ``run_population``
+calls pays Python dispatch and (without the jit cache) a retrace per cell;
+``run_sweep`` instead vmaps the scan over a stacked seed axis so the whole
+seed batch is ONE XLA program executed once — the same
+amortize-across-clients lever FedAvg-style simulators use.
+
+Batching rules:
+
+- **Seeds vmap.** Everything seed-dependent is stacked on a leading ``[S]``
+  axis: population states, colocation tensors, PRNG keys, the optional
+  ``context`` pytree (per-seed datasets), and stacked-batch leaves
+  (``[S, T, ...]``). ``stack_trees`` builds these stacks.
+- **Methods loop.** Two methods can only share a vmapped program when
+  their step pytrees AND step computations coincide; the five
+  ``METHODS_MOBILE`` all differ in computation (different update rules,
+  conditional cadences), so methods run as separate compiled programs.
+  The engine's jit cache still amortizes them: each method compiles once
+  per shape signature for the life of the process, and the vmapped seed
+  batch rides inside each.
+
+Bitwise guarantee (pinned by ``tests/test_sweep.py``): lane ``i`` of a
+vmapped sweep equals the ``i``-th sequential ``run_population`` call — the
+engine's fold_in/split key discipline is elementwise, and XLA's batched
+lowering preserves per-lane numerics on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.population import PopulationConfig, TrainFn
+from repro.scenarios.engine import _colocation_tensors, get_compiled_replay
+
+SweepResult = Tuple[Dict[str, Any], Dict[str, Any]]
+
+
+def stack_trees(trees: Sequence[Any]) -> Any:
+    """Stack a list of same-structure pytrees along a new leading axis."""
+    import jax.numpy as jnp
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+
+
+def stack_colocations(cos: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+    """Stack per-seed colocation dicts into [S, T, M] engine tensors."""
+    per = [_colocation_tensors(co) for co in cos]
+    fid, exch, pos, area = (stack_trees([p[i] for p in per])
+                            for i in range(4))
+    return {"fixed_id": fid, "exchange": exch, "pos": pos, "area": area}
+
+
+def run_sweep(states: Dict[str, Any], colocations: Dict[str, Any],
+              batches: Any, train_fn: TrainFn, cfg: PopulationConfig,
+              keys, *, eval_every: Optional[int] = None,
+              eval_fn: Optional[Callable] = None,
+              methods: Union[str, Sequence[str]] = "mlmule",
+              context: Any = None
+              ) -> Union[SweepResult, Dict[str, SweepResult]]:
+    """Replay S seeds (x several methods) as vmapped compiled scans.
+
+    states:      population states stacked ``[S, ...]`` (``stack_trees``
+                 over per-seed ``init_population`` results).
+    colocations: colocation dict with ``[S, T, M]`` tensors
+                 (``stack_colocations``), or a single unstacked ``[T, M]``
+                 dict shared by every seed (broadcast here).
+    batches:     traceable callable ``(key, t[, context]) -> batch dict``
+                 (shared code; per-seed data goes through ``context``), or
+                 a pytree of ``[S, T, ...]`` stacked leaves.
+    keys:        stacked PRNG keys ``[S, 2]``.
+    context:     optional pytree stacked ``[S, ...]`` handed to ``batches``
+                 / ``eval_fn`` as a trailing arg — per-seed datasets.
+    methods:     one method name or a sequence of them.
+
+    Returns ``(final_states, aux)`` with every array carrying a leading
+    ``[S]`` axis (``aux["evals"]`` is ``[S, E, ...]``); for a sequence of
+    methods, a ``{method: (final_states, aux)}`` dict.
+    """
+    import jax.numpy as jnp
+    fid, exch, pos, area = _colocation_tensors(colocations)
+    if fid.ndim == 2:                      # shared schedule -> broadcast
+        s = jax.tree.leaves(keys)[0].shape[0]
+        fid, exch, pos, area = (jnp.broadcast_to(l, (s,) + l.shape)
+                                for l in (fid, exch, pos, area))
+    n_steps = int(fid.shape[1])
+    stacked = None if callable(batches) else batches
+
+    def one(method: str) -> SweepResult:
+        fn = get_compiled_replay(states, fid, exch, pos, area, batches,
+                                 context, keys, train_fn, cfg, method=method,
+                                 eval_every=eval_every, eval_fn=eval_fn,
+                                 vmapped=True)
+        final, last, evals = fn(states, fid, exch, pos, area, stacked,
+                                context, keys)
+        n_ev = (n_steps // eval_every
+                if (eval_fn is not None and eval_every) else 0)
+        steps = (np.arange(n_ev) + 1) * eval_every - 1 if n_ev else \
+            np.zeros((0,), int)
+        return final, {"last_fid": last, "eval_steps": steps,
+                       "evals": evals}
+
+    if isinstance(methods, str):
+        return one(methods)
+    return {m: one(m) for m in methods}

@@ -1,0 +1,173 @@
+"""Sweep engine parity: every METHODS_MOBILE method on the scan engine
+matches the retired per-step loop bitwise, vmapped multi-seed sweeps match
+sequential ``run_population`` calls bitwise, and the jit cache stops
+retracing on repeat same-shape calls."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.population import (METHODS_MOBILE, PopulationConfig,
+                                   init_population)
+from repro.scenarios import (jit_cache_clear, jit_cache_stats,
+                             run_population, run_population_loop, run_sweep,
+                             stack_colocations, stack_trees,
+                             walk_colocation)
+
+F, M, T = 4, 6, 18
+
+
+def _linear_setup(mode="mobile", seed=0):
+    """Tiny linear-regression population: fast to compile, exact numerics."""
+    n = F if mode == "fixed" else M
+    X = jax.random.normal(jax.random.PRNGKey(50 + seed), (n, 12, 5))
+    Y = jax.random.normal(jax.random.PRNGKey(60 + seed), (n, 12))
+
+    def train_fn(params, batch, key):
+        xb, yb = batch
+        g = jax.grad(lambda p: jnp.mean((xb @ p["w"] - yb) ** 2))(params)
+        return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+
+    def batch_fn(key, t):
+        idx = jax.random.randint(key, (n, 4), 0, X.shape[1])
+        b = (jnp.take_along_axis(X, idx[:, :, None], 1),
+             jnp.take_along_axis(Y, idx, 1))
+        return ({"fixed": b, "mule": None} if mode == "fixed"
+                else {"fixed": None, "mule": b})
+
+    pcfg = PopulationConfig(mode=mode, n_fixed=F, n_mules=M)
+    pop = init_population(jax.random.PRNGKey(seed),
+                          lambda k: {"w": jax.random.normal(k, (5,))}, pcfg)
+    co = walk_colocation(seed, M, T)
+    return pop, co, batch_fn, train_fn, pcfg
+
+
+def _assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), \
+            "scan and reference diverged"
+
+
+@pytest.mark.parametrize("method", METHODS_MOBILE)
+def test_method_scan_matches_loop(method):
+    """Scan-folded baselines == the old per-step Python driver, bitwise."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    key = jax.random.PRNGKey(3)
+    final, aux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                                method=method)
+    ref, ref_last = run_population_loop(pop, co, batch_fn, train_fn, pcfg,
+                                        key, method=method)
+    _assert_trees_bitwise(final, ref)
+    np.testing.assert_array_equal(np.asarray(aux["last_fid"]),
+                                  np.asarray(ref_last))
+
+
+def test_local_method_fixed_mode_matches_loop():
+    """Table-1's local baseline runs in fixed mode; same parity there."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("fixed")
+    key = jax.random.PRNGKey(5)
+    final, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                              method="local")
+    ref, _ = run_population_loop(pop, co, batch_fn, train_fn, pcfg, key,
+                                 method="local")
+    _assert_trees_bitwise(final, ref)
+
+
+def test_gossip_cadence_only_fires_every_third_step():
+    """Between exchange steps (t % 3 != 2) gossip must carry models."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    co2 = {k: (v[:2] if np.ndim(v) > 1 and np.shape(v)[0] == T else v)
+           for k, v in co.items()}                       # steps 0..1 only
+    final, _ = run_population(pop, co2, batch_fn, train_fn, pcfg,
+                              jax.random.PRNGKey(0), method="gossip")
+    _assert_trees_bitwise(final["mule_models"], pop["mule_models"])
+
+
+@pytest.mark.parametrize("method", ["mlmule", "gossip"])
+def test_sweep_matches_sequential_bitwise(method):
+    """Lane i of a vmapped k-seed sweep == the i-th sequential run."""
+    seeds = [0, 1, 2]
+    setups = [_linear_setup("mobile", seed=s) for s in seeds]
+    _, _, batch_fn, train_fn, pcfg = setups[0]
+    keys = [jax.random.PRNGKey(100 + s) for s in seeds]
+
+    finals = []
+    for (pop, co, _, _, _), key in zip(setups, keys):
+        f, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                              method=method)
+        finals.append(f)
+
+    states = stack_trees([s[0] for s in setups])
+    cos = stack_colocations([s[1] for s in setups])
+    vf, aux = run_sweep(states, cos, batch_fn, train_fn, pcfg,
+                        stack_trees(keys), methods=method)
+    for i in range(len(seeds)):
+        _assert_trees_bitwise(jax.tree.map(lambda l: l[i], vf), finals[i])
+    assert aux["last_fid"].shape == (len(seeds), M)
+
+
+def test_sweep_shared_colocation_and_method_dict():
+    """A single [T, M] schedule broadcasts across seeds; a sequence of
+    methods returns a per-method dict of stacked results."""
+    pop0, co, batch_fn, train_fn, pcfg = _linear_setup("mobile", seed=0)
+    pop1 = _linear_setup("mobile", seed=1)[0]
+    states = stack_trees([pop0, pop1])
+    keys = stack_trees([jax.random.PRNGKey(0), jax.random.PRNGKey(1)])
+    out = run_sweep(states, co, batch_fn, train_fn, pcfg, keys,
+                    methods=("local", "oppcl"))
+    assert set(out) == {"local", "oppcl"}
+    for m, (vf, _) in out.items():
+        assert jax.tree.leaves(vf["mule_models"])[0].shape[0] == 2
+        seq, _ = run_population(pop1, co, batch_fn, train_fn, pcfg,
+                                jax.random.PRNGKey(1), method=m)
+        _assert_trees_bitwise(jax.tree.map(lambda l: l[1], vf), seq)
+
+
+def test_sweep_context_carries_per_seed_data():
+    """context leaves stacked [S, ...] reach batch_fn/eval_fn per lane."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile", seed=0)
+    states = stack_trees([pop, pop])
+    keys = stack_trees([jax.random.PRNGKey(7), jax.random.PRNGKey(7)])
+    ctx = {"scale": jnp.array([1.0, 2.0])}
+
+    def ctx_batch_fn(key, t, ctx):
+        b = batch_fn(key, t)
+        return {"fixed": None,
+                "mule": (b["mule"][0] * ctx["scale"], b["mule"][1])}
+
+    def ctx_eval(st, last, ctx):
+        return jnp.mean(st["mule_models"]["w"]) + ctx["scale"]
+
+    vf, aux = run_sweep(states, stack_colocations([co, co]), ctx_batch_fn,
+                        train_fn, pcfg, keys, eval_every=6,
+                        eval_fn=ctx_eval, context=ctx)
+    assert np.asarray(aux["evals"]).shape == (2, 3)
+    # identical seeds/states, different context -> lanes must differ
+    assert not np.allclose(np.asarray(aux["evals"])[0],
+                           np.asarray(aux["evals"])[1])
+    np.testing.assert_array_equal(aux["eval_steps"], [5, 11, 17])
+
+
+def test_jit_cache_no_retrace_on_repeat_call():
+    """Second same-shape call must be a cache hit with zero new traces."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    key = jax.random.PRNGKey(1)
+    jit_cache_clear()
+    run_population(pop, co, batch_fn, train_fn, pcfg, key, method="mlmule")
+    s1 = jit_cache_stats()
+    assert s1["misses"] == 1 and s1["traces"] == 1
+    run_population(pop, co, batch_fn, train_fn, pcfg,
+                   jax.random.PRNGKey(2), method="mlmule")
+    s2 = jit_cache_stats()
+    assert s2["traces"] == 1, "same-shape repeat call retraced"
+    assert s2["hits"] == 1
+    # a different schedule length is a different program -> one new trace
+    co_short = {k: (np.asarray(v)[: T // 2]
+                    if np.ndim(v) > 1 and np.shape(v)[0] == T else v)
+                for k, v in co.items()}
+    run_population(pop, co_short, batch_fn, train_fn, pcfg, key,
+                   method="mlmule")
+    s3 = jit_cache_stats()
+    assert s3["traces"] == 2 and s3["misses"] == 2
