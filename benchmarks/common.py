@@ -353,11 +353,13 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
         # engine's documented discipline — so at a fixed seed every method
         # trains on identical batch draws and curves differ only by method;
         # the whole schedule (method dispatch, t%3 cadences, in-scan eval)
-        # is one compiled program
+        # is one compiled program. The input population is not read again,
+        # so its buffers are donated and the replay updates in place.
         key, ke = jax.random.split(key)
         pop, aux = run_population(pop, colocation, batch_fn, train_fn,
                                   pcfg, ke, eval_every=cfg.eval_every,
-                                  eval_fn=eval_hook, method=cfg.method)
+                                  eval_fn=eval_hook, method=cfg.method,
+                                  donate=True)
         traces = [(int(s), float(np.mean(a))) for s, a in
                   zip(aux["eval_steps"], np.asarray(aux["evals"]))]
         last_fid = aux["last_fid"]

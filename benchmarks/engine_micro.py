@@ -8,21 +8,39 @@ sampling and key splits) per time step; it survives as
 compiles the whole replay into one XLA program; the gap is almost pure
 Python/jit dispatch overhead.
 
-``run_sweep_bench()`` — the multi-seed sweep path this PR targets:
-sequential ``run_population`` calls that retrace per call (the pre-cache
-behavior, reproduced by clearing the jit cache between calls) vs ONE
-vmapped compiled program over all seeds (``run_sweep``) hitting the cache.
+``run_sweep_bench()`` — the multi-seed sweep path: sequential
+``run_population`` calls that retrace per call (the pre-cache behavior,
+reproduced by clearing the jit cache between calls) vs ONE vmapped
+compiled program over all seeds (``run_sweep``) hitting the cache.
 Also asserts the jit cache's contract: a second same-shape
 ``run_population`` call performs zero retraces. Results land in
 ``BENCH_sweep.json`` so the perf trajectory is tracked PR over PR.
 
-  PYTHONPATH=src python -m benchmarks.engine_micro            # both
-  PYTHONPATH=src python -m benchmarks.engine_micro --sweep    # sweep only
+``run_distributed_bench()`` — the mule-sharded path: the retired per-step
+``make_distributed_step`` driver (one jitted shard_map dispatch per time
+step) vs the scan-based ``run_population_distributed`` (ONE program, both
+freshness statistics), on a forced-host-device mesh. Also asserts zero
+retraces on the warm call and that a vmapped distributed sweep is
+bitwise-equal per lane to sequential distributed runs. Results land in
+``BENCH_distributed.json``. Needs ≥ 8 devices: invoked without them, it
+re-execs itself in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``run_donation_bench()`` — compile-time memory deltas of donating the
+state pytree to the cached replay (``run_population(..., donate=True)``):
+XLA aliases the state buffers into the outputs, so steady-state peak drops
+by the full population size.
+
+  PYTHONPATH=src python -m benchmarks.engine_micro               # all
+  PYTHONPATH=src python -m benchmarks.engine_micro --sweep       # sweep only
+  PYTHONPATH=src python -m benchmarks.engine_micro --distributed # dist only
 """
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -30,14 +48,18 @@ import jax.numpy as jnp
 
 from repro.configs.mule_cnn import CNNConfig
 from repro.core import PopulationConfig, init_population
+from repro.core.freshness import FreshnessConfig
 from repro.models.cnn import cnn_forward, init_cnn, xent_loss
 from repro.scenarios import (jit_cache_clear, jit_cache_stats,
-                             run_population, run_population_loop, run_sweep,
-                             stack_colocations, stack_trees,
-                             walk_colocation)
+                             run_population, run_population_distributed,
+                             run_population_loop, run_sweep,
+                             run_sweep_distributed, stack_colocations,
+                             stack_trees, walk_colocation)
 
 _DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "BENCH_sweep.json")
+_DEFAULT_DIST_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "BENCH_distributed.json")
 
 
 def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4, seed=0):
@@ -171,13 +193,202 @@ def run_sweep_bench(n_seeds: int = 8, steps: int = 300, n_mules: int = 20,
     return rows
 
 
+def run_donation_bench(steps: int = 300, n_mules: int = 20):
+    """Compile-time memory effect of donating the replay's state buffers."""
+    from repro.scenarios.engine import _colocation_tensors, get_compiled_replay
+
+    pop, co, batch_fn, train_fn, pcfg = _setup(n_mules=n_mules, steps=steps)
+    key = jax.random.PRNGKey(7)
+    fid, exch, pos, area = _colocation_tensors(co)
+    args = (pop, fid, exch, pos, area, None, None, key)
+    rows = []
+    for donate in (False, True):
+        fn = get_compiled_replay(pop, fid, exch, pos, area, batch_fn, None,
+                                 key, train_fn, pcfg, method="mlmule",
+                                 eval_every=None, eval_fn=None,
+                                 donate=donate)
+        try:
+            ma = fn.lower(*args).compile().memory_analysis()
+            alias = int(ma.alias_size_in_bytes)
+            peak = (int(ma.argument_size_in_bytes)
+                    + int(ma.output_size_in_bytes)
+                    + int(ma.temp_size_in_bytes) - alias)
+        except Exception:                      # backend without the analysis
+            alias, peak = -1, -1
+        tag = "donated" if donate else "plain"
+        rows.append((f"engine.memory.{tag}.T{steps}", peak, "bytes peak"))
+        rows.append((f"engine.memory.{tag}.alias", alias, "bytes aliased"))
+    for name, val, derived in rows:
+        print(f"{name},{val},{derived}")
+    return rows
+
+
+def _respawn_with_devices(n_devices: int, out_path: str) -> None:
+    """Re-exec the distributed bench in a child with N forced host devices."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={n_devices}"
+                        ).strip()
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep +
+                         env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    env["_REPRO_DIST_BENCH_CHILD"] = "1"   # forbid a second respawn
+    subprocess.run([sys.executable, "-m", "benchmarks.engine_micro",
+                    "--distributed", "--out-distributed", out_path],
+                   env=env, cwd=root, check=True)
+
+
+def run_distributed_bench(n_devices: int = 8, n_mules: int = 64,
+                          steps: int = 400, n_seeds: int = 4,
+                          out_path: str = _DEFAULT_DIST_OUT):
+    """Mule-sharded replay: retired per-step shard_map loop vs one scan."""
+    from repro.core.distributed import (DistributedConfig,
+                                        make_distributed_step,
+                                        to_distributed_state)
+
+    out_path = os.path.abspath(out_path)    # the child runs with cwd=root
+    if jax.device_count() < n_devices:
+        # the force-host-devices flag only raises the CPU platform's count;
+        # if the child still lands here (e.g. a GPU backend), bail instead
+        # of respawning forever
+        if os.environ.get("_REPRO_DIST_BENCH_CHILD"):
+            raise RuntimeError(
+                f"need >= {n_devices} devices but forcing host devices "
+                f"yielded {jax.device_count()} on backend "
+                f"{jax.default_backend()!r}; run on a CPU host or a "
+                f"machine with enough accelerators")
+        _respawn_with_devices(n_devices, out_path)
+        with open(out_path) as f:            # the child's recorded numbers
+            payload = json.load(f)
+        return [(k, v, "from respawned child") for k, v in payload.items()
+                if isinstance(v, (int, float))]
+
+    mesh = jax.make_mesh((2, n_devices // 2), ("pod", "data"))
+    pop, co, batch_fn, train_fn, pcfg = _setup(n_mules=n_mules, steps=steps)
+    key = jax.random.PRNGKey(7)
+
+    # -- retired path: one jitted shard_map dispatch per step ----------------
+    # (make_distributed_step's flat signature and mean/std threshold)
+    dcfg_ms = DistributedConfig(pop=PopulationConfig(
+        mode=pcfg.mode, n_fixed=pcfg.n_fixed, n_mules=pcfg.n_mules,
+        freshness=FreshnessConfig(stat="meanstd")))
+    step = make_distributed_step(train_fn, dcfg_ms, mesh)
+    mule_b = jnp.zeros((n_mules, 2))
+
+    def loop(n):
+        mm, mts, fm = pop["mule_models"], pop["mule_ts"], pop["fixed_models"]
+        thr = pop["fresh"]["threshold"]
+        t = pop["t"]
+        fid_T, exch_T = jnp.asarray(co["fixed_id"]), jnp.asarray(co["exchange"])
+        for ti in range(n):
+            kb, ks = jax.random.split(jax.random.fold_in(key, ti))
+            bt = batch_fn(kb, ti)
+            mm, mts, fm, thr, t = step(mm, mts, fm, thr, t, fid_T[ti],
+                                       exch_T[ti], bt["fixed"], mule_b, ks)
+        jax.block_until_ready(jax.tree.leaves(mm)[0])
+
+    loop(3)                                     # compile
+    t0 = time.perf_counter()
+    loop(steps)
+    loop_s = time.perf_counter() - t0
+
+    # -- scan path: the whole replay is one program --------------------------
+    dstate = to_distributed_state(pop, dcfg_ms)
+    jit_cache_clear()
+    t0 = time.perf_counter()
+    _block(run_population_distributed(dstate, co, batch_fn, train_fn,
+                                      dcfg_ms, mesh, key)[0])
+    scan_cold_s = time.perf_counter() - t0
+    before = jit_cache_stats()["traces"]
+    t0 = time.perf_counter()
+    _block(run_population_distributed(dstate, co, batch_fn, train_fn,
+                                      dcfg_ms, mesh, key)[0])
+    scan_warm_s = time.perf_counter() - t0
+    retraces = jit_cache_stats()["traces"] - before
+    assert retraces == 0, "warm distributed replay retraced"
+
+    # paper-semantics filter (median/MAD sketch) on the same workload
+    dcfg_med = DistributedConfig(pop=pcfg)      # stat="median" default
+    dstate_med = to_distributed_state(pop, dcfg_med)
+    _block(run_population_distributed(dstate_med, co, batch_fn, train_fn,
+                                      dcfg_med, mesh, key)[0])
+    t0 = time.perf_counter()
+    _block(run_population_distributed(dstate_med, co, batch_fn, train_fn,
+                                      dcfg_med, mesh, key)[0])
+    scan_med_s = time.perf_counter() - t0
+
+    # -- distributed sweep: vmapped seeds must equal sequential runs ---------
+    import numpy as np
+    seeds = list(range(n_seeds))
+    setups = [_setup(n_mules=n_mules, steps=steps // 4, seed=s)
+              for s in seeds]
+    keys = [jax.random.PRNGKey(1000 + s) for s in seeds]
+    finals = [run_population_distributed(
+        to_distributed_state(st, dcfg_med), sco, batch_fn, train_fn,
+        dcfg_med, mesh, k)[0] for (st, sco, _, _, _), k in zip(setups, keys)]
+    states = stack_trees([to_distributed_state(s[0], dcfg_med)
+                          for s in setups])
+    cos = stack_colocations([s[1] for s in setups])
+    vf, _ = run_sweep_distributed(states, cos, batch_fn, train_fn, dcfg_med,
+                                  mesh, stack_trees(keys))
+    bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for i in range(n_seeds)
+        for a, b in zip(jax.tree.leaves(jax.tree.map(lambda l: l[i], vf)),
+                        jax.tree.leaves(finals[i])))
+    assert bitwise, "distributed sweep diverged from sequential runs"
+
+    speedup = loop_s / scan_warm_s
+    rows = [
+        (f"dist.per_step_loop.T{steps}", loop_s, "s total"),
+        (f"dist.scan_cold.T{steps}", scan_cold_s, "s total"),
+        (f"dist.scan_warm.T{steps}", scan_warm_s, "s total"),
+        (f"dist.scan_warm_median.T{steps}", scan_med_s,
+         "s total (median/MAD sketch)"),
+        (f"dist.speedup.T{steps}", speedup, "x (per-step/scan-warm)"),
+        ("dist.retraces_second_call", retraces, "count"),
+        ("dist.sweep_bitwise_equal", int(bitwise), "bool"),
+    ]
+    for name, val, derived in rows:
+        print(f"{name},{val:.3f},{derived}" if isinstance(val, float)
+              else f"{name},{val},{derived}")
+
+    payload = {
+        "bench": "engine_micro.run_distributed_bench",
+        "config": {"n_devices": n_devices, "mesh": dict(mesh.shape),
+                   "n_mules": n_mules, "steps": steps, "n_seeds": n_seeds,
+                   "method": "mlmule", "backend": jax.default_backend()},
+        "per_step_loop_s": round(loop_s, 4),
+        "scan_cold_s": round(scan_cold_s, 4),
+        "scan_warm_s": round(scan_warm_s, 4),
+        "scan_warm_median_sketch_s": round(scan_med_s, 4),
+        "speedup_vs_per_step": round(speedup, 2),
+        "retraces_second_call": int(retraces),
+        "sweep_bitwise_equal": bool(bitwise),
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", action="store_true",
                     help="run only the sweep benchmark")
+    ap.add_argument("--distributed", action="store_true",
+                    help="run only the distributed benchmark")
     ap.add_argument("--out", default=_DEFAULT_OUT)
+    ap.add_argument("--out-distributed", default=_DEFAULT_DIST_OUT)
     args = ap.parse_args()
-    if not args.sweep:
+    if args.distributed:
+        run_distributed_bench(out_path=args.out_distributed)
+    elif args.sweep:
+        run_sweep_bench(out_path=args.out)
+    else:
         run()
-    run_sweep_bench(out_path=args.out)
+        run_donation_bench()
+        run_sweep_bench(out_path=args.out)
+        run_distributed_bench(out_path=args.out_distributed)

@@ -53,5 +53,45 @@ def run():
     return rows
 
 
+def run_block_d_sweep():
+    """mule_agg D-tile sweep: the measurements behind ops._BLOCK_D_TABLE.
+
+    Times the interpret-path kernel (wall-clock tracks relative block
+    configurations on CPU, not TPU latency) at several (D, block_d) cells
+    and prints the per-D argmin — paste those into ``_BLOCK_D_TABLE`` in
+    ``repro/kernels/mule_agg/ops.py`` when re-tuning.
+    """
+    from repro.kernels.mule_agg.ops import pick_block_d
+    k = jax.random.PRNGKey(0)
+    f, m = 8, 64
+    rows, best = [], {}
+    for d in (1 << 12, 1 << 16, 1 << 18):
+        assign = jax.random.uniform(k, (f, m))
+        w = jax.random.normal(k, (m, d))
+        for block_d in (256, 512, 1024, 2048, 4096):
+            if block_d > max(128, d):
+                continue
+            us = _time(lambda: mule_agg(assign, w, block_d=block_d,
+                                        interpret=True), n=3)
+            rows.append((f"mule_agg.block.d{d}.b{block_d}", us,
+                         f"{d // block_d} tiles"))
+            if d not in best or us < best[d][1]:
+                best[d] = (block_d, us)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    for d, (block_d, us) in sorted(best.items()):
+        table = pick_block_d(d)
+        print(f"mule_agg.block.best.d{d},{block_d},"
+              f"table={table}{'' if table == block_d else ' (stale)'}")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--block-d", action="store_true",
+                    help="run only the mule_agg block_d sweep")
+    args = ap.parse_args()
+    if not args.block_d:
+        run()
+    run_block_d_sweep()

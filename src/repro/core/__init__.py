@@ -10,10 +10,14 @@
 - ``population``   — vectorized multi-device simulation engine (stacked
                      pytrees; jittable steps).
 - ``distributed``  — shard_map population engine: mules sharded over the
-                     ``data`` mesh axis, areas mapped to pods.
+                     ``data`` mesh axis, areas mapped to pods; the whole
+                     replay scans inside one shard_map program
+                     (``repro.scenarios.run_population_distributed``).
 """
 from repro.core.aggregation import masked_group_mean, pairwise_mix, weighted_average  # noqa: F401
-from repro.core.freshness import FreshnessConfig, init_freshness, push_and_update  # noqa: F401
+from repro.core.freshness import (  # noqa: F401
+    FreshnessConfig, init_freshness, init_freshness_sketch, push_and_update,
+    sketch_median_mad, sketch_push_and_update)
 from repro.core.population import (  # noqa: F401
     METHODS_MOBILE, PopulationConfig, init_population, make_method_step,
     population_step)

@@ -10,6 +10,21 @@ iff its age <= T (devices in warmup accept everything).
 
 The paper does not give alpha/beta values; defaults alpha=0.1, beta=1.0 are
 our documented assumption. History is a fixed ring buffer per device.
+
+Two statistics back the threshold:
+
+- the exact ring buffer (``init_freshness`` / ``push_and_update``) — the
+  single-host engine's path. The ring push is a sequential scan over mules
+  (slot order matters), which is NOT associative and therefore cannot be
+  merged with a ``psum`` across population shards.
+- an associative histogram sketch (``init_freshness_sketch`` /
+  ``sketch_push_and_update``) — ages are binned into a fixed per-device
+  histogram; per-step shard contributions are plain sums, so the
+  distributed engine merges them with one ``psum`` and recovers
+  median/MAD from the merged histogram (``sketch_median_mad``) to
+  interpolated-bin accuracy. ``FreshnessConfig.stat`` selects between the
+  sketch (``"median"``, paper semantics) and the legacy ``"meanstd"``
+  mean/std deviation the distributed engine used before.
 """
 from __future__ import annotations
 
@@ -28,6 +43,14 @@ class FreshnessConfig:
     history: int = 16         # ring buffer length K
     warmup: int = 4           # accept-all until this many receipts
     init_threshold: float = 1e6
+    # distributed-engine statistic: "median" (associative histogram sketch,
+    # matches the paper's Sec 3.1 median/MAD) or "meanstd" (per-step
+    # mean/std EMA — the engine's former documented deviation; carries no
+    # receipt counts, so ``warmup`` is ignored there). The single-host
+    # engine always uses the exact ring buffer above.
+    stat: str = "median"
+    sketch_bins: int = 64     # histogram resolution B (error ~ max_age/B)
+    sketch_max_age: float = 512.0  # ages above clamp into the last bin
 
 
 def init_freshness(n_fixed: int, cfg: FreshnessConfig):
@@ -96,3 +119,119 @@ def push_and_update(state, fixed_ids: jnp.ndarray, ages: jnp.ndarray,
         (1 - cfg.alpha) * state["threshold"] + cfg.alpha * target,
         state["threshold"])
     return {"ages": ages_buf, "count": count, "threshold": new_thr}
+
+
+# ---------------------------------------------------------------------------
+# associative median/MAD sketch (distributed engine)
+# ---------------------------------------------------------------------------
+#
+# A per-device age histogram over B fixed bins. Binning is a sum, so shard
+# contributions merge under ``psum``; median and MAD are then weighted
+# quantiles of the merged histogram, exact to within one bin width. The ring
+# buffer's last-K window is emulated by capping the resident histogram mass
+# at K after each push (old receipts decay geometrically instead of being
+# evicted slot-by-slot — the one semantic difference from the exact ring).
+
+
+def sketch_edges(cfg: FreshnessConfig) -> jnp.ndarray:
+    """Bin edges [B+1]: uniform over [0, sketch_max_age]."""
+    return jnp.linspace(0.0, cfg.sketch_max_age, cfg.sketch_bins + 1)
+
+
+def sketch_centers(cfg: FreshnessConfig) -> jnp.ndarray:
+    e = sketch_edges(cfg)
+    return 0.5 * (e[:-1] + e[1:])
+
+
+def age_bin_onehot(ages: jnp.ndarray, cfg: FreshnessConfig) -> jnp.ndarray:
+    """One-hot bin membership per age: [...] -> [..., B].
+
+    Ages below 0 / above ``sketch_max_age`` clamp into the edge bins, so no
+    mass is lost (the threshold comparison saturates the same way).
+    """
+    b = cfg.sketch_bins
+    width = cfg.sketch_max_age / b
+    idx = jnp.clip(jnp.floor(ages / width).astype(jnp.int32), 0, b - 1)
+    return jax.nn.one_hot(idx, b, dtype=jnp.float32)
+
+
+def age_histogram(ages: jnp.ndarray, weights: jnp.ndarray,
+                  cfg: FreshnessConfig) -> jnp.ndarray:
+    """Weighted histogram over the trailing axis: [..., N] -> [..., B]."""
+    onehot = age_bin_onehot(ages, cfg)                          # [..., N, B]
+    return jnp.sum(onehot * weights[..., None].astype(jnp.float32), axis=-2)
+
+
+def hist_quantile(hist: jnp.ndarray, edges: jnp.ndarray,
+                  q: float) -> jnp.ndarray:
+    """Interpolated weighted quantile per row: hist [..., B] -> [...]."""
+    c = jnp.cumsum(hist, axis=-1)
+    total = c[..., -1:]
+    t = q * total
+    idx = jnp.argmax(c >= t, axis=-1)                           # first cross
+    cprev = jnp.where(
+        idx > 0,
+        jnp.take_along_axis(c, jnp.maximum(idx - 1, 0)[..., None],
+                            axis=-1)[..., 0], 0.0)
+    mass = jnp.take_along_axis(hist, idx[..., None], axis=-1)[..., 0]
+    frac = jnp.clip((t[..., 0] - cprev) / jnp.maximum(mass, 1e-12), 0.0, 1.0)
+    width = edges[1] - edges[0]
+    return edges[idx] + frac * width
+
+
+def sketch_median_mad(hist: jnp.ndarray, cfg: FreshnessConfig):
+    """(median, MAD) of the binned ages: hist [..., B] -> ([...], [...]).
+
+    MAD is the weighted median of |bin center - median| — bins are sorted
+    by distance from the median and the 0.5-mass crossing is taken.
+
+    Accuracy: each estimate lands within one bin width of the sample order
+    statistics bracketing the 0.5 quantile (``numpy``'s midpoint convention
+    can sit anywhere inside that bracket, so on sparse histories the gap to
+    ``jnp.median`` is bounded by the middle-sample spacing, and on dense
+    histories both converge to bin resolution — tests pin both regimes).
+    """
+    edges = sketch_edges(cfg)
+    med = hist_quantile(hist, edges, 0.5)
+    d = jnp.abs(sketch_centers(cfg) - med[..., None])           # [..., B]
+    order = jnp.argsort(d, axis=-1)
+    ds = jnp.take_along_axis(d, order, axis=-1)
+    ws = jnp.take_along_axis(hist, order, axis=-1)
+    cw = jnp.cumsum(ws, axis=-1)
+    total = cw[..., -1:]
+    idx = jnp.argmax(cw >= 0.5 * total, axis=-1)
+    mad = jnp.take_along_axis(ds, idx[..., None], axis=-1)[..., 0]
+    return med, mad
+
+
+def init_freshness_sketch(n_fixed: int, cfg: FreshnessConfig):
+    return {
+        "hist": jnp.zeros((n_fixed, cfg.sketch_bins), jnp.float32),
+        "count": jnp.zeros((n_fixed,), jnp.int32),
+        "threshold": jnp.full((n_fixed,), cfg.init_threshold, jnp.float32),
+    }
+
+
+def sketch_push_and_update(state, step_hist: jnp.ndarray,
+                           step_counts: jnp.ndarray, cfg: FreshnessConfig):
+    """Fold one step's (already psum-merged) histogram into the sketch.
+
+    step_hist [F, B] / step_counts [F]: this step's delivered-age histogram
+    and receipt counts, summed across population shards by the caller. The
+    update itself runs on replicated state, so every shard computes the
+    identical new sketch.
+    """
+    hist = state["hist"] + step_hist
+    count = state["count"] + step_counts.astype(jnp.int32)
+    total = jnp.sum(hist, axis=-1)
+    # cap resident mass at the ring depth K: the sketch's last-K window
+    scale = jnp.where(total > cfg.history,
+                      cfg.history / jnp.maximum(total, 1e-12), 1.0)
+    hist = hist * scale[:, None]
+    med, mad = sketch_median_mad(hist, cfg)
+    target = med + cfg.beta * mad
+    new_thr = jnp.where(
+        jnp.sum(hist, axis=-1) > 0,
+        (1 - cfg.alpha) * state["threshold"] + cfg.alpha * target,
+        state["threshold"])
+    return {"hist": hist, "count": count, "threshold": new_thr}

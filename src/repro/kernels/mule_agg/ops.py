@@ -1,17 +1,58 @@
-"""Dispatching wrapper for the fused population aggregation."""
+"""Dispatching wrapper for the fused population aggregation.
+
+``block_d`` tuning: the kernel streams [M, block_d] tiles; too small pays
+grid overhead, too large overflows VMEM residency. ``block_d=None`` uses
+the measured size from ``pick_block_d`` (re-measure with
+``python -m benchmarks.kernels_micro`` — the ``mule_agg.block`` rows sweep
+block sizes per D; the pick is the argmin of that sweep on this container's
+interpret path, which tracks relative block behaviour, not TPU latency).
+
+``REPRO_PALLAS_INTERPRET`` overrides the interpret-mode autodetect for
+every call that doesn't pass ``interpret`` explicitly: set to ``1``/``0``
+to force the Pallas interpreter on/off (e.g. exercising the kernel path in
+CI on CPU, or dry-running TPU lowering).
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 
 from repro.kernels.mule_agg.kernel import mule_agg_pallas
 from repro.kernels.mule_agg.ref import mule_agg_reference  # noqa: F401
 
+# Measured by benchmarks/kernels_micro.py::run_block_d_sweep on this
+# container: the sweep came out monotone at every D (2^12..2^18) — per-tile
+# dispatch overhead dominates, so the largest tile always won (4096 beat
+# 2048 by ~1.9x at D=2^18) and the "table" collapses to one constant.
+# Capped at 4096 to keep the [M, block_d] tile + [F, block_d] output
+# VMEM-resident at realistic M (64 x 4096 x 4B = 1 MB streamed tile).
+# Re-introduce a (max_d -> block_d) ladder here if a future sweep on real
+# hardware yields a non-constant mapping.
+_BLOCK_D_MEASURED = 4096
 
-def mule_agg(assign, weights, *, block_d: int = 2048, backend: str = "auto",
-             interpret: bool | None = None):
+
+def pick_block_d(d: int) -> int:
+    """Measured D-tile size (see the tuning note above)."""
+    return _BLOCK_D_MEASURED
+
+
+def _env_interpret() -> bool | None:
+    val = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if not val:                    # unset or empty -> keep the autodetect
+        return None
+    return val.lower() not in ("0", "false")
+
+
+def mule_agg(assign, weights, *, block_d: int | None = None,
+             backend: str = "auto", interpret: bool | None = None):
     """assign [F, M] x weights [M, D] -> [F, D]."""
+    if interpret is None:
+        interpret = _env_interpret()
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if backend == "ref":
         return mule_agg_reference(assign, weights)
+    if block_d is None:
+        block_d = pick_block_d(weights.shape[1])
     return mule_agg_pallas(assign, weights, block_d=block_d, interpret=interpret)

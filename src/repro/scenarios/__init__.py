@@ -12,9 +12,11 @@ Replays are jit-cached (``engine.jit_cache_stats``) and multi-seed sweeps
 vmap into one compiled program (``sweep.run_sweep``).
 """
 from repro.scenarios.engine import (  # noqa: F401
-    jit_cache_clear, jit_cache_stats, run_population, run_population_loop)
+    jit_cache_clear, jit_cache_stats, run_population,
+    run_population_distributed, run_population_distributed_loop,
+    run_population_loop)
 from repro.scenarios.registry import (  # noqa: F401
     SCENARIOS, ScenarioSpec, get_scenario, list_scenarios, register,
     trace_colocation, walk_colocation)
 from repro.scenarios.sweep import (  # noqa: F401
-    run_sweep, stack_colocations, stack_trees)
+    run_sweep, run_sweep_distributed, stack_colocations, stack_trees)

@@ -9,6 +9,20 @@ method (``repro.core.population.METHODS_MOBILE``) rides the same engine:
 ``method=`` selects the per-step update built by ``make_method_step`` (the
 baselines' 3-step exchange cadence is a ``lax.cond`` on the step index).
 
+Distributed replay
+------------------
+``run_population_distributed`` lifts the same scan — ``psum`` collective
+schedule included — under ``shard_map`` over the mesh mule (``data``) axis:
+mule state and colocation columns shard, fixed-device state replicates, and
+``repro.core.distributed.make_distributed_method_step`` supplies the
+step, so a mule-sharded experiment is ONE program instead of one
+``shard_map`` dispatch per step (the retired ``make_distributed_step``
+path, preserved by ``run_population_distributed_loop`` as the parity
+reference). Multi-seed sweeps compose: ``run_sweep_distributed`` stacks the
+seed ``vmap`` axis *inside* the shard_map block (i.e. outside the mule
+axis, unsharded), one program per method, bitwise-equal per lane to
+sequential distributed runs.
+
 Jit cache
 ---------
 ``run_population`` used to retrace on every call — fine for one replay per
@@ -18,7 +32,9 @@ module-level cache keyed on everything that determines the traced program:
   (kind, method, cfg, eval_every, n_steps,
    train_fn, eval_fn, batch-callable identity,
    shape/dtype signatures of state, colocation tensors, stacked batches,
-   context, and the PRNG key)
+   context, and the PRNG key;
+   plus donation, and — for the distributed kinds — mesh and the
+   DistributedConfig)
 
 ``cfg`` hashes by value (frozen dataclass); functions hash by identity, so
 reuse the *same* ``train_fn``/``batches``/``eval_fn`` objects across calls
@@ -103,15 +119,24 @@ def _colocation_tensors(colocation, n_steps=None):
 def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
                   method: str, eval_every: Optional[int],
                   eval_fn: Optional[Callable], n_steps: int,
-                  has_context: bool) -> Callable:
+                  has_context: bool,
+                  step_builder: Optional[Callable] = None) -> Callable:
     """Un-jitted replay core ``(state, fid, exch, pos, area, stacked_batches,
-    context, key) -> (state, last_fid, evals)`` closed over the statics."""
+    context, key) -> (state, last_fid, evals)`` closed over the statics.
+
+    ``step_builder(area) -> step_fn`` overrides the per-step update (the
+    distributed engine injects its shard-local collective step here); the
+    default is the single-host ``make_method_step`` dispatch.
+    """
     dynamic = callable(batches)
     batch_fn = batches if dynamic else None
+    if step_builder is None:
+        step_builder = lambda area: make_method_step(method, train_fn, cfg,
+                                                     area)
 
     def replay(state, fid, exch, pos, area, stacked_batches, context, key):
         _STATS["traces"] += 1          # python side effect: fires per trace
-        step_fn = make_method_step(method, train_fn, cfg, area)
+        step_fn = step_builder(area)
         n_mules = fid.shape[1]
         ts = jnp.arange(n_steps, dtype=jnp.int32)
 
@@ -163,26 +188,74 @@ def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
     return replay
 
 
+def _distributed_specs(state, batches, dcfg, *, vmapped: bool):
+    """shard_map in/out PartitionSpecs for the distributed replay.
+
+    Mule-population leaves (leading mule axis) shard over ``dcfg.data_axis``;
+    everything else replicates. With ``vmapped`` the seed stack axis is an
+    extra unsharded leading dim (the seed vmap sits *inside* the shard_map
+    block, outside the mule axis).
+    """
+    from jax.sharding import PartitionSpec as P
+    ax = dcfg.data_axis
+    lead = (None,) if vmapped else ()
+
+    def subtree(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    state_specs = {
+        k: subtree(v, P(*lead, ax) if k in ("mule_models", "mule_ts")
+                   else P())
+        for k, v in state.items()
+    }
+    if callable(batches) or batches is None:
+        batch_specs = P()                       # no leaves to partition
+    else:
+        batch_specs = {
+            k: subtree(v, P(*lead, None, ax) if k == "mule" else P())
+            for k, v in batches.items()
+        }
+    in_specs = (state_specs,
+                P(*lead, None, ax), P(*lead, None, ax),   # fid, exch
+                P(*lead, None, ax), P(*lead, ax),         # pos, area
+                batch_specs, P(), P())                    # batches, ctx, key
+    out_specs = (state_specs, P(*lead, ax), P())          # state, last, evals
+    return in_specs, out_specs
+
+
 def get_compiled_replay(state, fid, exch, pos, area, batches, context, key,
                         train_fn: TrainFn, cfg: PopulationConfig, *,
                         method: str, eval_every: Optional[int],
                         eval_fn: Optional[Callable],
-                        vmapped: bool = False) -> Callable:
+                        vmapped: bool = False, donate: bool = False,
+                        mesh=None, dcfg=None) -> Callable:
     """Fetch (or build + memoize) the jitted replay for this signature.
 
     ``vmapped=True`` wraps the core in ``jax.vmap`` over a leading stack
     axis on every array argument (``repro.scenarios.sweep`` uses this); the
     leading-axis difference in the shape signature keeps batched and
     unbatched programs in separate cache slots.
+
+    ``mesh``/``dcfg`` select the distributed kind: the (possibly vmapped)
+    core is wrapped in ``shard_map`` over the mesh with the step from
+    ``make_distributed_method_step``, and both join the cache key.
+
+    ``donate=True`` donates the state pytree (``donate_argnums=(0,)``) so
+    the replay reuses its buffers in place — callers must not touch the
+    input state afterwards; parity paths that replay the same state twice
+    keep the default. Donated and undonated programs cache separately.
     """
     dynamic = callable(batches)
     n_steps = int(fid.shape[-2])
+    kind = (("distributed_sweep" if vmapped else "distributed")
+            if mesh is not None else ("sweep" if vmapped else "population"))
     cache_key = (
-        "sweep" if vmapped else "population", method, cfg, eval_every,
+        kind, method, cfg, eval_every,
         n_steps, train_fn, eval_fn, batches if dynamic else None,
         _sig(state), _sig((fid, exch, pos, area)),
         None if dynamic else _sig(batches),
         None if context is None else _sig(context), _sig(key),
+        donate, None if mesh is None else (mesh, dcfg),
     )
     fn = _JIT_CACHE.get(cache_key)
     if fn is not None:
@@ -190,12 +263,24 @@ def get_compiled_replay(state, fid, exch, pos, area, batches, context, key,
         _JIT_CACHE.move_to_end(cache_key)
         return fn
     _STATS["misses"] += 1
+    step_builder = None
+    if mesh is not None:
+        from repro.core.distributed import make_distributed_method_step
+        dist_step = make_distributed_method_step(method, train_fn, dcfg)
+        step_builder = lambda area: dist_step
     core = _build_replay(batches, train_fn, cfg, method=method,
                          eval_every=eval_every, eval_fn=eval_fn,
-                         n_steps=n_steps, has_context=context is not None)
+                         n_steps=n_steps, has_context=context is not None,
+                         step_builder=step_builder)
     if vmapped:
         core = jax.vmap(core)
-    fn = jax.jit(core)
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        in_specs, out_specs = _distributed_specs(
+            state, batches, dcfg, vmapped=vmapped)
+        core = shard_map(core, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    fn = jax.jit(core, donate_argnums=(0,) if donate else ())
     _JIT_CACHE[cache_key] = fn
     while len(_JIT_CACHE) > _JIT_CACHE_MAX:
         _JIT_CACHE.popitem(last=False)
@@ -206,7 +291,8 @@ def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
                    batches: Any, train_fn: TrainFn, cfg: PopulationConfig,
                    key, *, eval_every: Optional[int] = None,
                    eval_fn: Optional[Callable] = None,
-                   method: str = "mlmule", context: Any = None
+                   method: str = "mlmule", context: Any = None,
+                   donate: bool = False
                    ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     """Scan one method over a precomputed co-location schedule (jit-cached).
 
@@ -226,6 +312,10 @@ def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
                 metric pytree`` run inside the scan every ``eval_every``
                 steps (``last_fid`` is each mule's most recent fixed
                 device, 0 before any visit).
+    donate:     donate the state buffers to the compiled replay (in-place
+                update for large populations). The input ``state`` arrays
+                are dead after the call — leave False when replaying the
+                same state again (parity tests do).
 
     Returns ``(final_state, aux)`` with
     ``aux = {"last_fid": [M], "eval_steps": np [E], "evals": stacked/None}``
@@ -236,7 +326,8 @@ def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
     stacked = None if callable(batches) else batches
     fn = get_compiled_replay(state, fid, exch, pos, area, batches, context,
                              key, train_fn, cfg, method=method,
-                             eval_every=eval_every, eval_fn=eval_fn)
+                             eval_every=eval_every, eval_fn=eval_fn,
+                             donate=donate)
     state, last, evals = fn(state, fid, exch, pos, area, stacked, context,
                             key)
     n_ev = n_steps // eval_every if (eval_fn is not None and eval_every) else 0
@@ -248,7 +339,7 @@ def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
 def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
                         batches: Any, train_fn: TrainFn,
                         cfg: PopulationConfig, key, *,
-                        method: str = "mlmule"
+                        method: str = "mlmule", context: Any = None
                         ) -> Tuple[Dict[str, Any], jnp.ndarray]:
     """The retired per-step harness driver, kept as the parity reference.
 
@@ -256,6 +347,10 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
     branching — exactly the loop ``benchmarks/common.py`` ran before every
     method moved onto the scan. Parity tests pin ``run_population`` to this
     bitwise at fixed seed; ``benchmarks/engine_micro.py`` times the gap.
+
+    ``context`` mirrors the scan path's hook: when set (and ``batches`` is
+    a callable) the loop calls ``batches(kb, t, context)``, so parity tests
+    cover context-carrying runs too.
 
     Returns ``(final_state, last_fid)``.
     """
@@ -278,7 +373,8 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
         fid, exch, pos = fid_T[t], exch_T[t], pos_T[t]
         if dynamic:
             kb, ks = jax.random.split(jax.random.fold_in(key, t))
-            bt = batches(kb, t)
+            bt = batches(kb, t, context) if context is not None else \
+                batches(kb, t)
         else:
             ks = jax.random.fold_in(key, t)
             bt = jax.tree.map(lambda l: l[t], batches)
@@ -307,4 +403,125 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
                     state["mule_models"], pos, area, bt["mule"], kg)
         else:
             raise ValueError(method)
+    return state, last_fid
+
+
+# ---------------------------------------------------------------------------
+# distributed replay: the scan under shard_map over the mule axis
+# ---------------------------------------------------------------------------
+
+
+def _check_mule_sharding(n_mules: int, mesh, dcfg) -> None:
+    shards = mesh.shape[dcfg.data_axis]
+    if n_mules % shards:
+        raise ValueError(
+            f"n_mules={n_mules} must divide evenly over the "
+            f"{dcfg.data_axis!r} mesh axis (size {shards})")
+
+
+def run_population_distributed(state: Dict[str, Any],
+                               colocation: Dict[str, Any], batches: Any,
+                               train_fn: TrainFn, dcfg, mesh, key, *,
+                               eval_every: Optional[int] = None,
+                               eval_fn: Optional[Callable] = None,
+                               method: str = "mlmule", context: Any = None,
+                               donate: bool = False
+                               ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """``run_population`` with the population sharded over the mesh.
+
+    The whole replay — the ``psum`` collective schedule of
+    ``make_distributed_method_step`` included — is one ``lax.scan`` under
+    ``shard_map`` over ``dcfg.data_axis`` (jit-cached like the single-host
+    path; the mesh and ``dcfg`` join the cache key). Mule state/colocation
+    columns shard, fixed-device state and the freshness sketch replicate.
+
+    state:   ``to_distributed_state(init_population(...), dcfg)`` layout.
+    dcfg:    ``repro.core.distributed.DistributedConfig`` — collective
+             schedule (``cross_pod``) and axis names; the freshness
+             statistic comes from ``dcfg.pop.freshness.stat``.
+    mesh:    a ``jax.sharding.Mesh`` whose axes include ``dcfg.data_axis``
+             (and ``dcfg.pod_axis`` when set). ``n_mules`` must divide the
+             data-axis size.
+    batches: the ``run_population`` contract; a batch callable runs inside
+             every shard on the replicated key, so it must be
+             deterministic in ``(key, t[, context])``; full ``[n_mules,
+             ...]`` mule batches are sliced per shard by the step. Stacked
+             pytrees shard their ``"mule"`` leaves.
+    eval_fn: runs shard-local with replicated outputs assumed — read
+             replicated state (``fixed_models``) / replicated context only.
+    method:  ``"mlmule"`` or ``"local"`` (peer-encounter baselines need
+             cross-shard neighbor search and stay single-host).
+    donate:  donate state buffers (in-place replay); input state is dead
+             after the call.
+
+    Returns ``(final_state, aux)`` exactly like ``run_population``.
+    """
+    fid, exch, pos, area = _colocation_tensors(colocation)
+    n_steps = fid.shape[0]
+    _check_mule_sharding(fid.shape[1], mesh, dcfg)
+    stacked = None if callable(batches) else batches
+    fn = get_compiled_replay(state, fid, exch, pos, area, batches, context,
+                             key, train_fn, dcfg.pop, method=method,
+                             eval_every=eval_every, eval_fn=eval_fn,
+                             donate=donate, mesh=mesh, dcfg=dcfg)
+    state, last, evals = fn(state, fid, exch, pos, area, stacked, context,
+                            key)
+    n_ev = n_steps // eval_every if (eval_fn is not None and eval_every) else 0
+    steps = (np.arange(n_ev) + 1) * eval_every - 1 if n_ev else \
+        np.zeros((0,), int)
+    return state, {"last_fid": last, "eval_steps": steps, "evals": evals}
+
+
+def run_population_distributed_loop(state: Dict[str, Any],
+                                    colocation: Dict[str, Any], batches: Any,
+                                    train_fn: TrainFn, dcfg, mesh, key, *,
+                                    method: str = "mlmule",
+                                    context: Any = None
+                                    ) -> Tuple[Dict[str, Any], jnp.ndarray]:
+    """Per-step distributed driver: the parity/bench reference.
+
+    One jitted ``shard_map`` dispatch per simulation step — the dispatch
+    pattern ``make_distributed_step`` imposed on every experiment, now
+    driven through the same step function and key discipline as the scan
+    so ``run_population_distributed`` is pinned to it bitwise.
+
+    Returns ``(final_state, last_fid)`` (``last_fid`` sharded like the
+    mule axis).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.core.distributed import make_distributed_method_step
+
+    fid_T, exch_T, pos_T, area = _colocation_tensors(colocation)
+    n_steps, n_mules = fid_T.shape
+    _check_mule_sharding(n_mules, mesh, dcfg)
+    ax = dcfg.data_axis
+    state_specs = {
+        k: jax.tree.map(lambda _: P(ax) if k in ("mule_models", "mule_ts")
+                        else P(), v)
+        for k, v in state.items()
+    }
+    info_specs = {"fixed_id": P(ax), "exchange": P(ax), "pos": P(ax),
+                  "t": P()}
+    step_core = make_distributed_method_step(method, train_fn, dcfg)
+    step = jax.jit(shard_map(
+        step_core, mesh=mesh,
+        in_specs=(state_specs, info_specs, P(), P()),
+        out_specs=state_specs, check_rep=False))
+
+    dynamic = callable(batches)
+    last_fid = jnp.zeros((n_mules,), jnp.int32)
+    for t in range(n_steps):
+        fid, exch, pos = fid_T[t], exch_T[t], pos_T[t]
+        if dynamic:
+            kb, ks = jax.random.split(jax.random.fold_in(key, t))
+            bt = batches(kb, t, context) if context is not None else \
+                batches(kb, t)
+        else:
+            ks = jax.random.fold_in(key, t)
+            bt = jax.tree.map(lambda l: l[t], batches)
+        info = {"fixed_id": fid, "exchange": exch, "pos": pos,
+                "t": jnp.asarray(t, jnp.int32)}
+        state = step(state, info, bt, ks)
+        last_fid = jnp.where(fid >= 0, fid, last_fid)
     return state, last_fid

@@ -25,6 +25,13 @@ Bitwise guarantee (pinned by ``tests/test_sweep.py``): lane ``i`` of a
 vmapped sweep equals the ``i``-th sequential ``run_population`` call — the
 engine's fold_in/split key discipline is elementwise, and XLA's batched
 lowering preserves per-lane numerics on CPU.
+
+``run_sweep_distributed`` composes the seed axis with the distributed
+engine's mesh: the seed ``vmap`` sits *inside* the ``shard_map`` block —
+stacked outside the sharded mule axis, unsharded — so a distributed
+multi-seed sweep is still one program per method, and each lane is
+bitwise-equal to a sequential ``run_population_distributed`` call on the
+same mesh (``tests/test_distributed.py`` pins it).
 """
 from __future__ import annotations
 
@@ -58,7 +65,8 @@ def run_sweep(states: Dict[str, Any], colocations: Dict[str, Any],
               keys, *, eval_every: Optional[int] = None,
               eval_fn: Optional[Callable] = None,
               methods: Union[str, Sequence[str]] = "mlmule",
-              context: Any = None
+              context: Any = None, mesh=None, dcfg=None,
+              donate: bool = False
               ) -> Union[SweepResult, Dict[str, SweepResult]]:
     """Replay S seeds (x several methods) as vmapped compiled scans.
 
@@ -74,25 +82,36 @@ def run_sweep(states: Dict[str, Any], colocations: Dict[str, Any],
     context:     optional pytree stacked ``[S, ...]`` handed to ``batches``
                  / ``eval_fn`` as a trailing arg — per-seed datasets.
     methods:     one method name or a sequence of them.
+    mesh/dcfg:   distributed mode (``run_sweep_distributed`` fills these):
+                 each lane replays on the mule-sharded engine.
+    donate:      donate the stacked state buffers (single method only —
+                 a second method would replay already-donated state).
 
     Returns ``(final_states, aux)`` with every array carrying a leading
     ``[S]`` axis (``aux["evals"]`` is ``[S, E, ...]``); for a sequence of
     methods, a ``{method: (final_states, aux)}`` dict.
     """
     import jax.numpy as jnp
+    if donate and not isinstance(methods, str):
+        raise ValueError("donate=True replays would reuse donated state "
+                         "across methods; pass a single method")
     fid, exch, pos, area = _colocation_tensors(colocations)
     if fid.ndim == 2:                      # shared schedule -> broadcast
         s = jax.tree.leaves(keys)[0].shape[0]
         fid, exch, pos, area = (jnp.broadcast_to(l, (s,) + l.shape)
                                 for l in (fid, exch, pos, area))
     n_steps = int(fid.shape[1])
+    if mesh is not None:
+        from repro.scenarios.engine import _check_mule_sharding
+        _check_mule_sharding(int(fid.shape[2]), mesh, dcfg)
     stacked = None if callable(batches) else batches
 
     def one(method: str) -> SweepResult:
         fn = get_compiled_replay(states, fid, exch, pos, area, batches,
                                  context, keys, train_fn, cfg, method=method,
                                  eval_every=eval_every, eval_fn=eval_fn,
-                                 vmapped=True)
+                                 vmapped=True, donate=donate, mesh=mesh,
+                                 dcfg=dcfg)
         final, last, evals = fn(states, fid, exch, pos, area, stacked,
                                 context, keys)
         n_ev = (n_steps // eval_every
@@ -105,3 +124,27 @@ def run_sweep(states: Dict[str, Any], colocations: Dict[str, Any],
     if isinstance(methods, str):
         return one(methods)
     return {m: one(m) for m in methods}
+
+
+def run_sweep_distributed(states: Dict[str, Any], colocations: Dict[str, Any],
+                          batches: Any, train_fn: TrainFn, dcfg, mesh,
+                          keys, *, eval_every: Optional[int] = None,
+                          eval_fn: Optional[Callable] = None,
+                          methods: Union[str, Sequence[str]] = "mlmule",
+                          context: Any = None, donate: bool = False
+                          ) -> Union[SweepResult, Dict[str, SweepResult]]:
+    """``run_sweep`` on the mule-sharded distributed engine.
+
+    Same stacking contract as ``run_sweep`` (leading ``[S]`` seed axis on
+    states/colocations/keys/context), plus ``dcfg``/``mesh`` from
+    ``run_population_distributed``; states follow the
+    ``to_distributed_state`` layout, stacked. The seed axis vmaps *inside*
+    the ``shard_map`` block (unsharded, outside the mule axis), so the
+    whole distributed sweep is one compiled program per method and lane
+    ``i`` is bitwise-equal to the ``i``-th sequential
+    ``run_population_distributed`` call.
+    """
+    return run_sweep(states, colocations, batches, train_fn, dcfg.pop, keys,
+                     eval_every=eval_every, eval_fn=eval_fn,
+                     methods=methods, context=context, mesh=mesh, dcfg=dcfg,
+                     donate=donate)

@@ -11,6 +11,55 @@ import sys
 import pytest
 
 
+def linear_population_setup(mode="mobile", seed=0, n_fixed=4, n_mules=6,
+                            n_steps=18, **fresh_kw):
+    """Tiny linear-regression population: fast to compile, exact numerics.
+
+    The shared workload of the engine parity suites (``test_sweep``,
+    ``test_distributed_engine``; ``test_distributed``'s subprocess prelude
+    keeps an inline copy by necessity). Returns
+    ``(pop, colocation, batch_fn, train_fn, pcfg)``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.freshness import FreshnessConfig
+    from repro.core.population import PopulationConfig, init_population
+    from repro.scenarios import walk_colocation
+
+    n = n_fixed if mode == "fixed" else n_mules
+    X = jax.random.normal(jax.random.PRNGKey(50 + seed), (n, 12, 5))
+    Y = jax.random.normal(jax.random.PRNGKey(60 + seed), (n, 12))
+
+    def train_fn(params, batch, key):
+        xb, yb = batch
+        g = jax.grad(lambda p: jnp.mean((xb @ p["w"] - yb) ** 2))(params)
+        return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+
+    def batch_fn(key, t):
+        idx = jax.random.randint(key, (n, 4), 0, X.shape[1])
+        b = (jnp.take_along_axis(X, idx[:, :, None], 1),
+             jnp.take_along_axis(Y, idx, 1))
+        return ({"fixed": b, "mule": None} if mode == "fixed"
+                else {"fixed": None, "mule": b})
+
+    pcfg = PopulationConfig(mode=mode, n_fixed=n_fixed, n_mules=n_mules,
+                            freshness=FreshnessConfig(**fresh_kw))
+    pop = init_population(jax.random.PRNGKey(seed),
+                          lambda k: {"w": jax.random.normal(k, (5,))}, pcfg)
+    co = walk_colocation(seed, n_mules, n_steps)
+    return pop, co, batch_fn, train_fn, pcfg
+
+
+def assert_trees_bitwise(a, b, what="engines diverged"):
+    """Leaf-for-leaf exact equality of two pytrees."""
+    import jax
+    import numpy as np
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), what
+
+
 def run_with_devices(code: str, n_devices: int = 8) -> str:
     """Run a python snippet in a subprocess with N host devices."""
     env = dict(os.environ)

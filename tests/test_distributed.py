@@ -1,6 +1,117 @@
 """Distributed engine + sharded MoE: multi-device subprocess tests."""
 import pytest
 
+# shared by the scan-engine tests below: a linear population + the
+# stacking/parity helpers, on a real (2, 4) pod x data mesh
+_SCAN_PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.population import PopulationConfig, init_population
+from repro.core.freshness import FreshnessConfig
+from repro.core.distributed import DistributedConfig, to_distributed_state
+from repro.scenarios import (run_population, run_population_distributed,
+                             run_population_distributed_loop,
+                             run_sweep_distributed, stack_colocations,
+                             stack_trees, walk_colocation)
+
+F, M, T = 4, 16, 12
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+
+def linear_setup(mode, seed=0, **fresh_kw):
+    n = F if mode == "fixed" else M
+    X = jax.random.normal(jax.random.PRNGKey(50 + seed), (n, 12, 5))
+    Y = jax.random.normal(jax.random.PRNGKey(60 + seed), (n, 12))
+    def train_fn(params, batch, key):
+        xb, yb = batch
+        g = jax.grad(lambda p: jnp.mean((xb @ p["w"] - yb) ** 2))(params)
+        return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+    def batch_fn(key, t):
+        idx = jax.random.randint(key, (n, 4), 0, X.shape[1])
+        b = (jnp.take_along_axis(X, idx[:, :, None], 1),
+             jnp.take_along_axis(Y, idx, 1))
+        return ({"fixed": b, "mule": None} if mode == "fixed"
+                else {"fixed": None, "mule": b})
+    pcfg = PopulationConfig(mode=mode, n_fixed=F, n_mules=M,
+                            freshness=FreshnessConfig(**fresh_kw))
+    pop = init_population(jax.random.PRNGKey(seed),
+                          lambda k: {"w": jax.random.normal(k, (5,))}, pcfg)
+    co = walk_colocation(seed, M, T)
+    return pop, co, batch_fn, train_fn, pcfg
+
+def assert_bitwise(a, b, what):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), what
+"""
+
+
+@pytest.mark.slow
+def test_distributed_scan_matches_per_step_loop_multidevice(
+        multi_device_runner):
+    """Scan-vs-per-step bitwise parity on a real (2, 4) mesh, both
+    freshness statistics, both training modes."""
+    multi_device_runner(_SCAN_PRELUDE + """
+for mode in ("fixed", "mobile"):
+    for stat in ("median", "meanstd"):
+        pop, co, batch_fn, train_fn, pcfg = linear_setup(mode, stat=stat)
+        dcfg = DistributedConfig(pop=pcfg)
+        dstate = to_distributed_state(pop, dcfg)
+        key = jax.random.PRNGKey(3)
+        f1, aux = run_population_distributed(dstate, co, batch_fn, train_fn,
+                                             dcfg, mesh, key)
+        f2, last2 = run_population_distributed_loop(
+            dstate, co, batch_fn, train_fn, dcfg, mesh, key)
+        assert_bitwise(f1, f2, (mode, stat))
+        assert np.array_equal(np.asarray(aux["last_fid"]), np.asarray(last2))
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_scan_matches_single_host_multidevice(
+        multi_device_runner):
+    """Accept-all filter: the mule-sharded scan agrees with the single-host
+    engine on all state, both modes (mobile relies on the global-split
+    key discipline)."""
+    multi_device_runner(_SCAN_PRELUDE + """
+for mode in ("fixed", "mobile"):
+    pop, co, batch_fn, train_fn, pcfg = linear_setup(
+        mode, init_threshold=1e9, warmup=10**6)
+    dcfg = DistributedConfig(pop=pcfg)
+    key = jax.random.PRNGKey(5)
+    host, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key)
+    dist, _ = run_population_distributed(to_distributed_state(pop, dcfg),
+                                         co, batch_fn, train_fn, dcfg,
+                                         mesh, key)
+    for k in ("fixed_models", "mule_models", "mule_ts"):
+        for a, b in zip(jax.tree.leaves(host[k]), jax.tree.leaves(dist[k])):
+            err = float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+            assert err < 1e-5, (mode, k, err)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_sweep_bitwise_multidevice(multi_device_runner):
+    """Lane i of a vmapped distributed sweep == the i-th sequential
+    distributed run on the same mesh (seed axis outside the mule axis)."""
+    multi_device_runner(_SCAN_PRELUDE + """
+seeds = [0, 1, 2]
+setups = [linear_setup("fixed", seed=s) for s in seeds]
+_, _, batch_fn, train_fn, pcfg = setups[0]
+dcfg = DistributedConfig(pop=pcfg)
+keys = [jax.random.PRNGKey(100 + s) for s in seeds]
+finals = [run_population_distributed(
+    to_distributed_state(st, dcfg), co, batch_fn, train_fn, dcfg, mesh,
+    k)[0] for (st, co, _, _, _), k in zip(setups, keys)]
+states = stack_trees([to_distributed_state(s[0], dcfg) for s in setups])
+cos = stack_colocations([s[1] for s in setups])
+vf, aux = run_sweep_distributed(states, cos, batch_fn, train_fn, dcfg,
+                                mesh, stack_trees(keys))
+for i in range(len(seeds)):
+    assert_bitwise(jax.tree.map(lambda l: l[i], vf), finals[i], i)
+assert aux["last_fid"].shape == (len(seeds), M)
+print("OK")
+""")
+
 
 @pytest.mark.slow
 def test_distributed_engine_matches_reference(multi_device_runner):
@@ -10,8 +121,7 @@ from repro.core.population import PopulationConfig, init_population, population_
 from repro.core.distributed import DistributedConfig, make_distributed_step
 from repro.core.freshness import FreshnessConfig
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
 F, M = 8, 16
 def init_model(k): return {"w": jax.random.normal(k, (4, 3))}
 def train_fn(params, batch, key): return jax.tree.map(lambda p: p - 0.01, params)
@@ -46,8 +156,7 @@ def test_migrate_mules_swaps_pods(multi_device_runner):
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.distributed import migrate_mules
-mesh = jax.make_mesh((2, 2), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 2), ("pod", "data"))
 M = 8
 models = {"w": jnp.arange(M, dtype=jnp.float32)[:, None] * jnp.ones((1, 3))}
 models = jax.device_put(models, NamedSharding(mesh, P("data")))
@@ -69,8 +178,7 @@ def test_sharded_moe_matches_local(multi_device_runner):
 import jax, jax.numpy as jnp, dataclasses
 from repro.configs import get_smoke_config
 from repro.models.moe import init_moe, apply_moe
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 cfg = dataclasses.replace(get_smoke_config("granite-moe-1b-a400m"),
                           dtype="float32", capacity_factor=8.0)
 params = init_moe(jax.random.PRNGKey(0), cfg)
@@ -100,8 +208,7 @@ from repro.launch.sharding import batch_specs, param_specs, to_named
 from repro.launch.steps import make_train_step
 from repro.optim import sgd
 from repro.configs import InputShape
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
 cfg = get_smoke_config("stablelm-1.6b")
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))

@@ -1,0 +1,171 @@
+"""Distributed scan engine on an in-process single-device mesh.
+
+Multi-device coverage of the same properties lives in
+``tests/test_distributed.py`` (slow, subprocess); these run in tier-1 and
+pin the engine's contracts — scan vs per-step loop bitwise, agreement with
+the single-host engine under an accept-all filter, state conversion, and
+buffer donation — on a (1, 1) mesh where shard_map is exact.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import (DistributedConfig,
+                                    init_distributed_freshness,
+                                    to_distributed_state)
+from repro.core.freshness import FreshnessConfig
+from repro.core.population import PopulationConfig, init_population
+from repro.scenarios import (run_population, run_population_distributed,
+                             run_population_distributed_loop,
+                             run_sweep_distributed, stack_colocations,
+                             stack_trees)
+
+from conftest import assert_trees_bitwise, linear_population_setup
+
+F, M, T = 4, 6, 15
+
+
+def _mesh():
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("pod", "data"))
+
+
+def _linear_setup(mode="fixed", seed=0, **fresh_kw):
+    return linear_population_setup(mode, seed, n_fixed=F, n_mules=M,
+                                   n_steps=T, **fresh_kw)
+
+
+def _assert_trees_bitwise(a, b):
+    assert_trees_bitwise(a, b, "distributed scan and reference diverged")
+
+
+@pytest.mark.parametrize("mode", ["fixed", "mobile"])
+@pytest.mark.parametrize("stat", ["median", "meanstd"])
+def test_distributed_scan_matches_per_step_loop(mode, stat):
+    """One shard_map'd scan == the per-step shard_map driver, bitwise."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup(mode, stat=stat)
+    dcfg = DistributedConfig(pop=pcfg)
+    dstate = to_distributed_state(pop, dcfg)
+    mesh, key = _mesh(), jax.random.PRNGKey(3)
+    final, aux = run_population_distributed(dstate, co, batch_fn, train_fn,
+                                            dcfg, mesh, key)
+    ref, ref_last = run_population_distributed_loop(
+        dstate, co, batch_fn, train_fn, dcfg, mesh, key)
+    _assert_trees_bitwise(final, ref)
+    np.testing.assert_array_equal(np.asarray(aux["last_fid"]),
+                                  np.asarray(ref_last))
+
+
+@pytest.mark.parametrize("mode", ["fixed", "mobile"])
+def test_distributed_matches_single_host_accept_all(mode):
+    """With the filter accepting everything the two engines agree — the
+    distributed key discipline (global split + shard slice) makes even the
+    mobile-mode per-mule training draws identical."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup(
+        mode, init_threshold=1e9, warmup=10**6)
+    dcfg = DistributedConfig(pop=pcfg)
+    key = jax.random.PRNGKey(5)
+    host, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key)
+    dist, _ = run_population_distributed(to_distributed_state(pop, dcfg),
+                                         co, batch_fn, train_fn, dcfg,
+                                         _mesh(), key)
+    for k in ("fixed_models", "mule_models", "mule_ts"):
+        for a, b in zip(jax.tree.leaves(host[k]), jax.tree.leaves(dist[k])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+
+
+def test_distributed_eval_inside_scan():
+    """Fixed-mode eval hook runs in-scan on the replicated state."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("fixed")
+    dcfg = DistributedConfig(pop=pcfg)
+    final, aux = run_population_distributed(
+        to_distributed_state(pop, dcfg), co, batch_fn, train_fn, dcfg,
+        _mesh(), jax.random.PRNGKey(0), eval_every=5,
+        eval_fn=lambda st, last: jnp.mean(st["fixed_models"]["w"]))
+    np.testing.assert_array_equal(aux["eval_steps"], [4, 9, 14])
+    assert np.asarray(aux["evals"]).shape == (3,)
+    np.testing.assert_allclose(float(np.asarray(aux["evals"])[-1]),
+                               float(jnp.mean(final["fixed_models"]["w"])),
+                               rtol=1e-6)
+
+
+def test_distributed_sweep_matches_sequential():
+    """Lane i of a distributed sweep == the i-th sequential distributed
+    run; the seed vmap stacks outside the shard_map mule axis."""
+    seeds = [0, 1]
+    setups = [_linear_setup("fixed", seed=s) for s in seeds]
+    _, _, batch_fn, train_fn, pcfg = setups[0]
+    dcfg = DistributedConfig(pop=pcfg)
+    mesh = _mesh()
+    keys = [jax.random.PRNGKey(100 + s) for s in seeds]
+    finals = [run_population_distributed(
+        to_distributed_state(st, dcfg), co, batch_fn, train_fn, dcfg, mesh,
+        k)[0] for (st, co, _, _, _), k in zip(setups, keys)]
+    states = stack_trees([to_distributed_state(s[0], dcfg) for s in setups])
+    cos = stack_colocations([s[1] for s in setups])
+    vf, aux = run_sweep_distributed(states, cos, batch_fn, train_fn, dcfg,
+                                    mesh, stack_trees(keys))
+    for i in range(len(seeds)):
+        _assert_trees_bitwise(jax.tree.map(lambda l: l[i], vf), finals[i])
+    assert aux["last_fid"].shape == (len(seeds), M)
+
+
+def test_to_distributed_state_carries_history():
+    """Threshold and ring receipts survive the state conversion."""
+    pcfg = PopulationConfig(n_fixed=2, n_mules=4)
+    pop = init_population(jax.random.PRNGKey(0),
+                          lambda k: {"w": jnp.zeros((3,))}, pcfg)
+    pop["fresh"]["threshold"] = jnp.asarray([5.0, 7.0])
+    pop["fresh"]["ages"] = pop["fresh"]["ages"].at[0, :3].set(
+        jnp.asarray([1.0, 2.0, 3.0]))
+    pop["fresh"]["count"] = jnp.asarray([3, 0], jnp.int32)
+    dstate = to_distributed_state(pop, DistributedConfig(pop=pcfg))
+    np.testing.assert_array_equal(np.asarray(dstate["fresh"]["threshold"]),
+                                  [5.0, 7.0])
+    np.testing.assert_array_equal(np.asarray(dstate["fresh"]["count"]),
+                                  [3, 0])
+    assert float(jnp.sum(dstate["fresh"]["hist"][0])) == 3.0
+    assert float(jnp.sum(dstate["fresh"]["hist"][1])) == 0.0
+
+
+def test_distributed_rejects_unsupported_methods_and_shapes():
+    import types
+    from repro.scenarios.engine import _check_mule_sharding
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("fixed")
+    dcfg = DistributedConfig(pop=pcfg)
+    with pytest.raises(ValueError, match="mlmule"):
+        run_population_distributed(to_distributed_state(pop, dcfg), co,
+                                   batch_fn, train_fn, dcfg, _mesh(),
+                                   jax.random.PRNGKey(0), method="gossip")
+    with pytest.raises(ValueError, match="stat"):
+        init_distributed_freshness(2, FreshnessConfig(stat="bogus"))
+    fake_mesh = types.SimpleNamespace(shape={"pod": 1, "data": 4})
+    with pytest.raises(ValueError, match="divide"):
+        _check_mule_sharding(6, fake_mesh, dcfg)   # 6 mules on 4 shards
+    _check_mule_sharding(8, fake_mesh, dcfg)       # 8 on 4 is fine
+
+
+def test_donated_replay_matches_undonated():
+    """donate=True replays in place without changing results.
+
+    Every donated call gets a freshly built (identically seeded) state —
+    donation invalidates the input buffers, which is the whole point.
+    """
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("fixed")
+    dcfg = DistributedConfig(pop=pcfg)
+    key = jax.random.PRNGKey(9)
+    ref, _ = run_population_distributed(to_distributed_state(pop, dcfg), co,
+                                        batch_fn, train_fn, dcfg, _mesh(),
+                                        key)
+    ref2, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key)
+    pop_d = _linear_setup("fixed")[0]              # same seed, fresh buffers
+    donated, _ = run_population_distributed(
+        to_distributed_state(pop_d, dcfg), co, batch_fn, train_fn, dcfg,
+        _mesh(), key, donate=True)
+    _assert_trees_bitwise(ref, donated)
+    pop_d2 = _linear_setup("fixed")[0]
+    don2, _ = run_population(pop_d2, co, batch_fn, train_fn, pcfg, key,
+                             donate=True)
+    _assert_trees_bitwise(ref2, don2)

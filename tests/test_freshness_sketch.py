@@ -1,0 +1,112 @@
+"""Associative median/MAD sketch vs the exact ring-buffer statistics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.freshness import (FreshnessConfig, age_histogram,
+                                  init_freshness_sketch, sketch_median_mad,
+                                  sketch_push_and_update)
+
+
+def _middle_bracket(vals):
+    """The two order statistics bracketing the 0.5 quantile."""
+    s = np.sort(vals)
+    n = len(s)
+    return s[max(n - 1, 0) // 2], s[n // 2]
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_sketch_bracketed_on_ring_histories(seed):
+    """On ring-sized (sparse) histories the sketch median/MAD land within
+    one bin of the order statistics bracketing the 0.5 quantile — the
+    estimator's honest guarantee (numpy's midpoint convention can sit
+    anywhere inside the middle gap, so exact equality is not it)."""
+    cfg = FreshnessConfig(sketch_bins=256, sketch_max_age=128.0)
+    width = cfg.sketch_max_age / cfg.sketch_bins
+    rng = np.random.default_rng(seed)
+    # a ring-buffer-like history per device: ages in-range, some rows short
+    f, k = 6, 16
+    ages = rng.uniform(0.0, 100.0, size=(f, k)).astype(np.float32)
+    valid = rng.uniform(size=(f, k)) < 0.8
+    valid[:, 0] = True                        # at least one receipt per row
+    hist = age_histogram(jnp.asarray(ages), jnp.asarray(valid, jnp.float32),
+                         cfg)
+    med, mad = sketch_median_mad(hist, cfg)
+    for i in range(f):
+        vals = ages[i][valid[i]]
+        lo, hi = _middle_bracket(vals)
+        assert lo - width - 1e-5 <= float(med[i]) <= hi + width + 1e-5, \
+            (i, float(med[i]), lo, hi)
+        # MAD bracket on distances from the sketch's own median (bin
+        # centers add up to half a width each side)
+        dlo, dhi = _middle_bracket(np.abs(vals - float(med[i])))
+        assert dlo - 1.5 * width - 1e-5 <= float(mad[i]) \
+            <= dhi + 1.5 * width + 1e-5, (i, float(mad[i]), dlo, dhi)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sketch_matches_exact_on_dense_histories(seed):
+    """With many receipts the middle gap vanishes and the sketch agrees
+    with jnp.median / exact MAD to a couple of bin widths."""
+    cfg = FreshnessConfig(sketch_bins=256, sketch_max_age=128.0)
+    width = cfg.sketch_max_age / cfg.sketch_bins
+    rng = np.random.default_rng(100 + seed)
+    f, k = 4, 4096
+    ages = rng.uniform(0.0, 120.0, size=(f, k)).astype(np.float32)
+    hist = age_histogram(jnp.asarray(ages), jnp.ones((f, k), jnp.float32),
+                         cfg)
+    med, mad = sketch_median_mad(hist, cfg)
+    for i in range(f):
+        em = float(jnp.median(jnp.asarray(ages[i])))
+        ea = float(jnp.median(jnp.abs(jnp.asarray(ages[i]) - em)))
+        assert abs(float(med[i]) - em) <= 2 * width, (float(med[i]), em)
+        assert abs(float(mad[i]) - ea) <= 2 * width, (float(mad[i]), ea)
+
+
+def test_sketch_histogram_is_associative():
+    """Shard contributions merge by plain addition: hist(A ∪ B) ==
+    hist(A) + hist(B) — the property that lets the engine psum them."""
+    cfg = FreshnessConfig(sketch_bins=64, sketch_max_age=64.0)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0, 60, size=(4, 8)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 60, size=(4, 8)).astype(np.float32))
+    ones = jnp.ones((4, 8))
+    merged = age_histogram(jnp.concatenate([a, b], axis=1),
+                           jnp.ones((4, 16)), cfg)
+    parts = age_histogram(a, ones, cfg) + age_histogram(b, ones, cfg)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(parts))
+
+
+def test_sketch_push_threshold_formula():
+    """T' = (1-a) T + a (med + beta * mad) with the sketch's med/mad."""
+    cfg = FreshnessConfig(alpha=0.25, beta=1.5, history=1000,
+                          init_threshold=10.0, sketch_bins=128,
+                          sketch_max_age=64.0)
+    state = init_freshness_sketch(2, cfg)
+    ages = jnp.asarray([[4.0, 8.0, 12.0]])
+    step_hist = age_histogram(jnp.broadcast_to(ages, (2, 3)),
+                              jnp.asarray([[1.0] * 3, [0.0] * 3]), cfg)
+    out = sketch_push_and_update(state, step_hist,
+                                 jnp.asarray([3.0, 0.0]), cfg)
+    med, mad = sketch_median_mad(out["hist"], cfg)
+    want = (1 - cfg.alpha) * 10.0 + cfg.alpha * (float(med[0])
+                                                 + cfg.beta * float(mad[0]))
+    np.testing.assert_allclose(float(out["threshold"][0]), want, rtol=1e-5)
+    # device 1 received nothing: threshold must not move
+    np.testing.assert_allclose(float(out["threshold"][1]), 10.0)
+    assert int(out["count"][0]) == 3 and int(out["count"][1]) == 0
+
+
+def test_sketch_mass_capped_at_history_depth():
+    """Resident mass stays <= K, emulating the ring's last-K window."""
+    cfg = FreshnessConfig(history=8, sketch_bins=32, sketch_max_age=32.0)
+    state = init_freshness_sketch(1, cfg)
+    for t in range(5):
+        ages = jnp.asarray([[float(t), float(t) + 1.0, float(t) + 2.0]])
+        step_hist = age_histogram(ages, jnp.ones((1, 3)), cfg)
+        state = sketch_push_and_update(state, step_hist,
+                                       jnp.asarray([3.0]), cfg)
+    total = float(jnp.sum(state["hist"]))
+    assert total <= cfg.history + 1e-4, total
+    assert int(state["count"][0]) == 15      # receipts keep counting

@@ -7,47 +7,23 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.population import (METHODS_MOBILE, PopulationConfig,
-                                   init_population)
+from repro.core.population import METHODS_MOBILE
 from repro.scenarios import (jit_cache_clear, jit_cache_stats,
                              run_population, run_population_loop, run_sweep,
-                             stack_colocations, stack_trees,
-                             walk_colocation)
+                             stack_colocations, stack_trees)
+
+from conftest import assert_trees_bitwise, linear_population_setup
 
 F, M, T = 4, 6, 18
 
 
 def _linear_setup(mode="mobile", seed=0):
-    """Tiny linear-regression population: fast to compile, exact numerics."""
-    n = F if mode == "fixed" else M
-    X = jax.random.normal(jax.random.PRNGKey(50 + seed), (n, 12, 5))
-    Y = jax.random.normal(jax.random.PRNGKey(60 + seed), (n, 12))
-
-    def train_fn(params, batch, key):
-        xb, yb = batch
-        g = jax.grad(lambda p: jnp.mean((xb @ p["w"] - yb) ** 2))(params)
-        return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
-
-    def batch_fn(key, t):
-        idx = jax.random.randint(key, (n, 4), 0, X.shape[1])
-        b = (jnp.take_along_axis(X, idx[:, :, None], 1),
-             jnp.take_along_axis(Y, idx, 1))
-        return ({"fixed": b, "mule": None} if mode == "fixed"
-                else {"fixed": None, "mule": b})
-
-    pcfg = PopulationConfig(mode=mode, n_fixed=F, n_mules=M)
-    pop = init_population(jax.random.PRNGKey(seed),
-                          lambda k: {"w": jax.random.normal(k, (5,))}, pcfg)
-    co = walk_colocation(seed, M, T)
-    return pop, co, batch_fn, train_fn, pcfg
+    return linear_population_setup(mode, seed, n_fixed=F, n_mules=M,
+                                   n_steps=T)
 
 
 def _assert_trees_bitwise(a, b):
-    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
-    assert len(la) == len(lb)
-    for x, y in zip(la, lb):
-        assert np.array_equal(np.asarray(x), np.asarray(y)), \
-            "scan and reference diverged"
+    assert_trees_bitwise(a, b, "scan and reference diverged")
 
 
 @pytest.mark.parametrize("method", METHODS_MOBILE)
@@ -148,6 +124,30 @@ def test_sweep_context_carries_per_seed_data():
     assert not np.allclose(np.asarray(aux["evals"])[0],
                            np.asarray(aux["evals"])[1])
     np.testing.assert_array_equal(aux["eval_steps"], [5, 11, 17])
+
+
+def test_loop_context_matches_scan_context():
+    """The loop parity reference supports the context pytree the scan
+    threads to ``batches``, so context-carrying runs are parity-covered."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    ctx = {"scale": jnp.float32(1.7)}
+
+    def ctx_batch_fn(key, t, ctx):
+        b = batch_fn(key, t)
+        return {"fixed": None,
+                "mule": (b["mule"][0] * ctx["scale"], b["mule"][1])}
+
+    key = jax.random.PRNGKey(21)
+    final, _ = run_population(pop, co, ctx_batch_fn, train_fn, pcfg, key,
+                              context=ctx)
+    ref, _ = run_population_loop(pop, co, ctx_batch_fn, train_fn, pcfg, key,
+                                 context=ctx)
+    _assert_trees_bitwise(final, ref)
+    # and the context actually matters: a different scale diverges
+    other, _ = run_population_loop(pop, co, ctx_batch_fn, train_fn, pcfg,
+                                   key, context={"scale": jnp.float32(0.3)})
+    assert not np.array_equal(np.asarray(ref["mule_models"]["w"]),
+                              np.asarray(other["mule_models"]["w"]))
 
 
 def test_jit_cache_no_retrace_on_repeat_call():
