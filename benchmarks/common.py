@@ -93,10 +93,11 @@ def _image_data_fixed(cfg: ExperimentConfig):
         parts = dirichlet_partition(sup, cfg.n_fixed, float(cfg.dist[3:]),
                                     cfg.seed, min_per_part=24)
     elif cfg.dist == "shards":
-        sh = shards_partition(sup, sub, seed=cfg.seed)
+        n_areas = max(-(-cfg.n_fixed // 4), 2)     # ceil, 4 spaces per area
+        sh = shards_partition(sup, sub, n_areas=n_areas, seed=cfg.seed)
         parts = [np.concatenate([sh["space_idx"][(a, s)],
                                  sh["general_idx"][(a, s)]])
-                 for a in range(2) for s in range(4)]
+                 for a in range(n_areas) for s in range(4)]
     else:
         raise ValueError(cfg.dist)
     tr, te = zip(*[train_test_split(p, 0.2, cfg.seed) for p in parts])
@@ -111,11 +112,12 @@ def _image_data_mobile(cfg: ExperimentConfig, mule_space: np.ndarray,
     """Shards data on mules per Sec 4.3.1: space's sub-class + 5th sub-class."""
     x, sup, sub = make_image_dataset(cfg.seed, cfg.n_per_sub, cfg.n_super,
                                      cfg.n_sub, cfg.image_size, cfg.noise)
-    sh = shards_partition(sup, sub, seed=cfg.seed)
+    # ceil so every place id's area (place // 4) has a partition, min 2 to
+    # keep the pre-registry hardcoded layout for small populations
+    n_areas = max(-(-cfg.n_fixed // 4), 2)
+    sh = shards_partition(sup, sub, n_areas=n_areas, seed=cfg.seed)
     rng = np.random.default_rng(cfg.seed + 1)
-    tr_list, te_space = [], {}
-    for key, idx in sh["space_idx"].items():
-        te_space[key] = idx
+    tr_list = []
     for m in range(cfg.n_mules):
         key = (int(mule_area[m]), int(mule_space[m]))
         local = sh["space_idx"][key]
@@ -126,7 +128,7 @@ def _image_data_mobile(cfg: ExperimentConfig, mule_space: np.ndarray,
         tr_list.append(np.concatenate([take, takeg]))
     tr = _pad_to(tr_list, rng)
     # per-space test sets (mule evaluated on its current space's data)
-    te_idx = _pad_to([sh["space_idx"][(a, s)] for a in range(2)
+    te_idx = _pad_to([sh["space_idx"][(a, s)] for a in range(n_areas)
                       for s in range(4)], rng)
     return (jnp.asarray(x[tr]), jnp.asarray(sup[tr]),
             jnp.asarray(x[te_idx]), jnp.asarray(sup[te_idx]))
@@ -247,7 +249,7 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
     if cfg.scenario:
         spec = get_scenario(cfg.scenario)
         cfg = dataclasses.replace(cfg, mode=spec.mode, dist=spec.dist,
-                                  task=spec.task)
+                                  task=spec.task, n_fixed=spec.n_fixed)
     init, train_fn, eval_fn = _model_fns(cfg)
     colocation, mule_space, mule_area = _mobility_tensors(cfg)
 
@@ -314,7 +316,7 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
                 stacked = clients
             if (r + 1) % max(cfg.eval_every // 10, 1) == 0:
                 acc = eval_fixed_models(stacked) if cfg.mode == "fixed" else \
-                    eval_mobile_models(stacked, np.arange(n_clients) % 8)
+                    eval_mobile_models(stacked, np.arange(n_clients) % cfg.n_fixed)
                 # log the post-step index (round r covers steps
                 # [r*10, (r+1)*10)), matching the mobility methods' x-axis
                 traces.append(((r + 1) * 10 - 1, float(acc.mean())))
@@ -379,7 +381,7 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
     else:
         pre = eval_mobile_models(final_models, last_fid if cfg.method not in
                                  ("fedavg", "cfl", "fedas") else
-                                 np.arange(n_clients) % 8)
+                                 np.arange(n_clients) % cfg.n_fixed)
         post = pre
 
     return {
@@ -439,7 +441,7 @@ def run_sweep_experiment(cfg: ExperimentConfig, seeds: Sequence[int],
     if cfg.scenario:
         spec = get_scenario(cfg.scenario)
         cfg = dataclasses.replace(cfg, mode=spec.mode, dist=spec.dist,
-                                  task=spec.task)
+                                  task=spec.task, n_fixed=spec.n_fixed)
     init, train_fn, eval_fn = _model_fns(cfg)
     n_clients = cfg.n_fixed if cfg.mode == "fixed" else cfg.n_mules
 

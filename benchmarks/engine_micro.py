@@ -26,6 +26,10 @@ bitwise-equal per lane to sequential distributed runs. Results land in
 re-execs itself in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``run_churn_bench()`` — masked (churn) vs dense replay on the same schedule
+shape: same compiled program (the mask is data — zero retraces), warm
+overhead pinned <= 10% and tracked in ``BENCH_churn.json``.
+
 ``run_donation_bench()`` — compile-time memory deltas of donating the
 state pytree to the cached replay (``run_population(..., donate=True)``):
 XLA aliases the state buffers into the outputs, so steady-state peak drops
@@ -34,6 +38,7 @@ by the full population size.
   PYTHONPATH=src python -m benchmarks.engine_micro               # all
   PYTHONPATH=src python -m benchmarks.engine_micro --sweep       # sweep only
   PYTHONPATH=src python -m benchmarks.engine_micro --distributed # dist only
+  PYTHONPATH=src python -m benchmarks.engine_micro --churn       # churn only
 """
 from __future__ import annotations
 
@@ -60,6 +65,8 @@ _DEFAULT_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "BENCH_sweep.json")
 _DEFAULT_DIST_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                  "BENCH_distributed.json")
+_DEFAULT_CHURN_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "BENCH_churn.json")
 
 
 def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4, seed=0):
@@ -199,12 +206,12 @@ def run_donation_bench(steps: int = 300, n_mules: int = 20):
 
     pop, co, batch_fn, train_fn, pcfg = _setup(n_mules=n_mules, steps=steps)
     key = jax.random.PRNGKey(7)
-    fid, exch, pos, area = _colocation_tensors(co)
-    args = (pop, fid, exch, pos, area, None, None, key)
+    fid, exch, pos, area, act = _colocation_tensors(co)
+    args = (pop, fid, exch, pos, area, act, None, None, key)
     rows = []
     for donate in (False, True):
-        fn = get_compiled_replay(pop, fid, exch, pos, area, batch_fn, None,
-                                 key, train_fn, pcfg, method="mlmule",
+        fn = get_compiled_replay(pop, fid, exch, pos, area, act, batch_fn,
+                                 None, key, train_fn, pcfg, method="mlmule",
                                  eval_every=None, eval_fn=None,
                                  donate=donate)
         try:
@@ -220,6 +227,73 @@ def run_donation_bench(steps: int = 300, n_mules: int = 20):
         rows.append((f"engine.memory.{tag}.alias", alias, "bytes aliased"))
     for name, val, derived in rows:
         print(f"{name},{val},{derived}")
+    return rows
+
+
+def run_churn_bench(steps: int = 500, n_mules: int = 20, reps: int = 5,
+                    out_path: str = _DEFAULT_CHURN_OUT):
+    """Masked vs dense replay on the same schedule shape.
+
+    The activity mask is *data*, not a static: a churned run must reuse the
+    dense run's compiled program (zero retraces) and cost essentially the
+    same wall clock — the mask only adds elementwise selects to a scan
+    dominated by training math. Asserts the warm-run overhead stays <= 10%
+    (median of ``reps``) and records it in ``BENCH_churn.json``.
+    """
+    from repro.mobility import markov_churn_mask
+
+    pop, co, batch_fn, train_fn, pcfg = _setup(n_mules=n_mules, steps=steps)
+    key = jax.random.PRNGKey(7)
+    co_churn = dict(co)
+    co_churn["active"] = markov_churn_mask(11, steps, n_mules,
+                                           p_leave=0.05, p_join=0.15)
+    active_frac = float(co_churn["active"].mean())
+
+    jit_cache_clear()
+    _block(run_population(pop, co, batch_fn, train_fn, pcfg, key)[0])
+    before = jit_cache_stats()["traces"]
+    _block(run_population(pop, co_churn, batch_fn, train_fn, pcfg, key)[0])
+    retraces = jit_cache_stats()["traces"] - before
+    assert retraces == 0, "churned same-shape run retraced the dense program"
+
+    def timed(schedule):
+        t0 = time.perf_counter()
+        _block(run_population(pop, schedule, batch_fn, train_fn, pcfg,
+                              key)[0])
+        return time.perf_counter() - t0
+
+    dense_s = [timed(co) for _ in range(reps)]
+    churn_s = [timed(co_churn) for _ in range(reps)]
+    dense_med = sorted(dense_s)[reps // 2]
+    churn_med = sorted(churn_s)[reps // 2]
+    overhead = churn_med / dense_med - 1.0
+    assert overhead <= 0.10, \
+        f"masked scan overhead {overhead:.1%} exceeds the 10% budget"
+
+    rows = [
+        (f"churn.dense_warm.T{steps}", dense_med, "s (median)"),
+        (f"churn.masked_warm.T{steps}", churn_med, "s (median)"),
+        (f"churn.overhead.T{steps}", overhead * 100.0, "% (masked/dense-1)"),
+        ("churn.retraces_masked_call", retraces, "count"),
+        ("churn.active_frac", active_frac, "mean mask"),
+    ]
+    for name, val, derived in rows:
+        print(f"{name},{val:.4f},{derived}")
+
+    payload = {
+        "bench": "engine_micro.run_churn_bench",
+        "config": {"steps": steps, "n_mules": n_mules, "reps": reps,
+                   "method": "mlmule", "backend": jax.default_backend()},
+        "dense_warm_s": round(dense_med, 4),
+        "masked_warm_s": round(churn_med, 4),
+        "overhead_pct": round(overhead * 100.0, 2),
+        "retraces_masked_call": int(retraces),
+        "active_frac": round(active_frac, 4),
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
     return rows
 
 
@@ -380,15 +454,21 @@ if __name__ == "__main__":
                     help="run only the sweep benchmark")
     ap.add_argument("--distributed", action="store_true",
                     help="run only the distributed benchmark")
+    ap.add_argument("--churn", action="store_true",
+                    help="run only the churn-mask overhead benchmark")
     ap.add_argument("--out", default=_DEFAULT_OUT)
     ap.add_argument("--out-distributed", default=_DEFAULT_DIST_OUT)
+    ap.add_argument("--out-churn", default=_DEFAULT_CHURN_OUT)
     args = ap.parse_args()
     if args.distributed:
         run_distributed_bench(out_path=args.out_distributed)
     elif args.sweep:
         run_sweep_bench(out_path=args.out)
+    elif args.churn:
+        run_churn_bench(out_path=args.out_churn)
     else:
         run()
         run_donation_bench()
         run_sweep_bench(out_path=args.out)
+        run_churn_bench(out_path=args.out_churn)
         run_distributed_bench(out_path=args.out_distributed)

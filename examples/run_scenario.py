@@ -5,11 +5,16 @@
       --method gossip --seeds 4          # seed-averaged, one vmapped program
   PYTHONPATH=src python examples/run_scenario.py --list
 
-The scenario supplies mobility, protocol mode, and data partition; the
-harness supplies the model, pretraining, and the compiled scan engine.
-Every mobile method (mlmule/gossip/oppcl/local/mlmule+gossip) rides the
-engine; with ``--seeds N > 1`` the replay batches all seeds into one
-vmapped compiled program (``run_sweep_experiment``).
+The scenario supplies mobility, protocol mode, data partition — and, for
+the churn family, a per-step device activity mask the engine threads
+through every path: ``commuter_churn`` (Markov join/leave sessions),
+``event_crowd_flash`` (flash joins, mass exits), ``multi_area_3city``
+(3 near-isolated cities, 12 spaces), ``mixed_cadence`` (per-space
+exchange tempos). The harness supplies the model, pretraining, and the
+compiled scan engine. Every mobile method
+(mlmule/gossip/oppcl/local/mlmule+gossip) rides the engine; with
+``--seeds N > 1`` the replay batches all seeds into one vmapped compiled
+program (``run_sweep_experiment``).
 """
 import argparse
 import os
@@ -27,7 +32,12 @@ from repro.scenarios import SCENARIOS, list_scenarios
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="random_walk",
-                    choices=list_scenarios())
+                    choices=list_scenarios(),
+                    help="registered scenario; churn variants "
+                         "(commuter_churn, event_crowd_flash) replay with "
+                         "device join/leave masks, multi_area_3city spans "
+                         "3 cities, mixed_cadence varies per-space "
+                         "exchange tempo (see --list)")
     ap.add_argument("--method", default="mlmule", choices=METHODS_MOBILE)
     ap.add_argument("--steps", type=int, default=240)
     ap.add_argument("--n-mules", type=int, default=12)

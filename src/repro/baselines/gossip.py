@@ -6,7 +6,7 @@ neighbors (masked row-normalized mixing), then train one local step.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,18 +14,28 @@ import jax.numpy as jnp
 from repro.core.aggregation import batched_mix, masked_group_mean
 
 
-def encounter_matrix(pos: jnp.ndarray, area: jnp.ndarray, radius: float) -> jnp.ndarray:
-    """pos [M,2], area [M] -> symmetric bool [M,M] (no self)."""
+def encounter_matrix(pos: jnp.ndarray, area: jnp.ndarray, radius: float,
+                     active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """pos [M,2], area [M] -> symmetric bool [M,M] (no self).
+
+    ``active`` ([M] bool, optional) drops switched-off mules from both
+    sides of every encounter — a sleeping device neither initiates nor
+    serves as a peer.
+    """
     d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
     same_area = area[:, None] == area[None, :]
     enc = (d2 <= radius ** 2) & same_area
+    if active is not None:
+        enc = enc & active[:, None] & active[None, :]
     return enc & ~jnp.eye(pos.shape[0], dtype=bool)
 
 
 def gossip_step(models: Any, pos: jnp.ndarray, area: jnp.ndarray,
                 batches: Any, train_fn: Callable, key, *,
-                radius: float = 0.15, gamma: float = 0.5) -> Any:
-    enc = encounter_matrix(pos, area, radius).astype(jnp.float32)   # [M, M]
+                radius: float = 0.15, gamma: float = 0.5,
+                active: Optional[jnp.ndarray] = None) -> Any:
+    enc = encounter_matrix(pos, area, radius,
+                           active).astype(jnp.float32)              # [M, M]
     neigh_mean, mass = masked_group_mean(models, enc)
     met = (mass > 0).astype(jnp.float32)
     models = batched_mix(models, neigh_mean, gamma * met)           # aggregate

@@ -8,7 +8,7 @@ neighbor as the peer for the step.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,9 +19,10 @@ from repro.core.aggregation import batched_mix
 
 def oppcl_step(models: Any, pos: jnp.ndarray, area: jnp.ndarray,
                batches: Any, train_fn: Callable, key, *,
-               radius: float = 0.15, gamma: float = 0.5) -> Any:
+               radius: float = 0.15, gamma: float = 0.5,
+               active: Optional[jnp.ndarray] = None) -> Any:
     m = pos.shape[0]
-    enc = encounter_matrix(pos, area, radius)
+    enc = encounter_matrix(pos, area, radius, active)
     d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
     d2 = jnp.where(enc, d2, jnp.inf)
     peer = jnp.argmin(d2, axis=1)                                  # [M]

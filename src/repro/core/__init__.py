@@ -19,5 +19,5 @@ from repro.core.freshness import (  # noqa: F401
     FreshnessConfig, init_freshness, init_freshness_sketch, push_and_update,
     sketch_median_mad, sketch_push_and_update)
 from repro.core.population import (  # noqa: F401
-    METHODS_MOBILE, PopulationConfig, init_population, make_method_step,
-    population_step)
+    METHODS_MOBILE, PopulationConfig, apply_activity_mask, init_population,
+    make_method_step, population_step)

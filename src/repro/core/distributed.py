@@ -54,7 +54,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.freshness import (FreshnessConfig, age_bin_onehot,
                                   age_histogram, init_freshness_sketch,
                                   sketch_push_and_update)
-from repro.core.population import PopulationConfig
+from repro.core.population import PopulationConfig, apply_activity_mask
 
 
 @dataclasses.dataclass(frozen=True)
@@ -228,6 +228,14 @@ def make_distributed_method_step(method: str, train_fn: Callable,
     above) and ``local`` (no communication). The peer-encounter baselines
     (gossip/oppcl) need position-based neighbor search across the whole
     population and are single-host only.
+
+    Churn: ``info["active"]`` ([M_loc] bool, sharded like ``fixed_id``)
+    masks switched-off mules. For mlmule it ANDs into the delivery mask
+    before the fused reduction, so inactive mules contribute nothing to
+    the single psum payload (models, counts, freshness statistic) and the
+    step is bitwise-equal to the single-host masked step; for mobile-mode
+    local it selects inactive mules' old models back in after the dense
+    train.
     """
     cfg = dcfg.pop
     fcfg = cfg.freshness
@@ -258,6 +266,8 @@ def make_distributed_method_step(method: str, train_fn: Callable,
                               batches["mule"])
             keys = mule_train_keys(key, m_loc)
             trained = jax.vmap(train_fn)(st["mule_models"], mb, keys)
+            trained = apply_activity_mask(info.get("active"), trained,
+                                          st["mule_models"])
             return {**st, "mule_models": trained}
         return step
 
@@ -271,6 +281,12 @@ def make_distributed_method_step(method: str, train_fn: Callable,
         fid = info["fixed_id"]
         m_loc = fid.shape[0]
         deliver = info["exchange"] & (fid >= 0)
+        if info.get("active") is not None:
+            # churn folds into the delivery mask, so inactive mules vanish
+            # from the fused psum payload (model columns, counts, and the
+            # freshness statistic alike) — distributed == single-host
+            # under any mask by construction
+            deliver = deliver & info["active"]
         ages = t - st["mule_ts"]
         fresh = st["fresh"]
         thr = fresh["threshold"][jnp.maximum(fid, 0)]

@@ -29,6 +29,15 @@ hybrid). All of them share one traceable signature
 (``repro.scenarios.engine``) can replay any method as a single compiled
 program; the 3-step peer-exchange cadence (paper Sec 4.3.1) is a
 ``lax.cond`` on the step index carried in ``info["t"]``.
+
+Population churn: ``info["active"]`` ([M] bool, optional) marks which mules
+are switched on this step. An inactive mule neither trains, delivers,
+receives, nor serves as a gossip/oppcl peer — its model, timestamp, and
+freshness records are carried bitwise (``apply_activity_mask`` selects old
+leaves back in after the dense update). An all-ones mask reproduces the
+dense path bitwise: masking enters only as ``& active`` on the delivery
+mask and elementwise ``jnp.where`` selects, never as a change to the dense
+computation itself.
 """
 from __future__ import annotations
 
@@ -70,18 +79,44 @@ def init_population(key, init_model_fn: Callable[[jnp.ndarray], Any],
     }
 
 
+def apply_activity_mask(active, new: Any, old: Any) -> Any:
+    """Per-leaf select: lane ``m`` takes ``new`` where ``active[m]``.
+
+    ``active`` broadcasts against each leaf's leading (population) axis, so
+    inactive lanes carry ``old`` bitwise; an all-ones mask returns ``new``
+    bitwise (``jnp.where`` is an elementwise select of already-computed
+    values — it never perturbs the dense update). ``active=None`` means no
+    churn and returns ``new`` unchanged, so call sites need no guard.
+    """
+    if active is None:
+        return new
+
+    def sel(n, o):
+        m = active.reshape(active.shape + (1,) * (n.ndim - active.ndim))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
+
+
 def population_step(state: Dict[str, Any], info: Dict[str, jnp.ndarray],
                     batches: Dict[str, Any], train_fn: TrainFn,
                     cfg: PopulationConfig, key) -> Dict[str, Any]:
     """One simulation time step.
 
-    info:    {"fixed_id": [M] int32 (-1 = corridor), "exchange": [M] bool}
+    info:    {"fixed_id": [M] int32 (-1 = corridor), "exchange": [M] bool,
+              "active": [M] bool (optional; absent == all active)}
     batches: {"fixed": [F, B, ...], "mule": [M, B, ...]} (per mode; a mode
              only reads the side that trains).
+
+    An inactive mule (``~info["active"]``) delivers nothing, receives
+    nothing, and (mobile mode) does not train — every per-mule effect of
+    the protocol is already gated on ``deliver``, so folding the mask into
+    it covers the whole cycle.
     """
     t = state["t"]
     fid = info["fixed_id"]
     deliver = info["exchange"] & (fid >= 0)
+    if info.get("active") is not None:
+        deliver = deliver & info["active"]
 
     # -- 1–2: deliver + freshness filter ------------------------------------
     ages = t - state["mule_ts"]
@@ -158,6 +193,13 @@ def make_method_step(method: str, train_fn: TrainFn, cfg: PopulationConfig,
     Non-mlmule methods update only their model side; freshness state and
     the protocol clock are carried unchanged, exactly like the retired
     per-step harness loop they replace.
+
+    Churn: every method honours ``info["active"]`` ([M] bool, optional) —
+    mlmule folds it into the delivery mask (``population_step``); local
+    trains the whole population densely and selects inactive mules' old
+    models back in (``apply_activity_mask``); gossip/oppcl drop inactive
+    mules from the encounter matrix (they neither initiate nor serve as
+    peers) and carry their models through the exchange bitwise.
     """
     if method == "mlmule":
         def step(st, info, batches, key):
@@ -172,17 +214,23 @@ def make_method_step(method: str, train_fn: TrainFn, cfg: PopulationConfig,
                       else ("mule_models", "mule"))
 
         def step(st, info, batches, key):
-            return {**st, side: local_step(st[side], batches[bkey],
-                                           train_fn, key)}
+            trained = local_step(st[side], batches[bkey], train_fn, key)
+            if side == "mule_models":
+                trained = apply_activity_mask(info.get("active"), trained,
+                                              st[side])
+            return {**st, side: trained}
         return step
 
     if method in ("gossip", "oppcl"):
         peer_step = gossip_step if method == "gossip" else oppcl_step
 
         def step(st, info, batches, key):
+            act = info.get("active")
+
             def exchange(models):
-                return peer_step(models, info["pos"], area, batches["mule"],
-                                 train_fn, key)
+                new = peer_step(models, info["pos"], area, batches["mule"],
+                                train_fn, key, active=act)
+                return apply_activity_mask(act, new, models)
             models = jax.lax.cond(info["t"] % 3 == 2, exchange, lambda m: m,
                                   st["mule_models"])
             return {**st, "mule_models": models}
@@ -192,10 +240,12 @@ def make_method_step(method: str, train_fn: TrainFn, cfg: PopulationConfig,
         def step(st, info, batches, key):
             st = population_step(st, info, batches, train_fn, cfg, key)
             kg = jax.random.fold_in(key, 1)
+            act = info.get("active")
 
             def exchange(models):
-                return gossip_step(models, info["pos"], area, batches["mule"],
-                                   train_fn, kg)
+                new = gossip_step(models, info["pos"], area, batches["mule"],
+                                  train_fn, kg, active=act)
+                return apply_activity_mask(act, new, models)
             models = jax.lax.cond(info["t"] % 3 == 2, exchange, lambda m: m,
                                   st["mule_models"])
             return {**st, "mule_models": models}

@@ -1,6 +1,8 @@
 from repro.mobility.patterns import (  # noqa: F401
-    commuter_trace, event_crowd_trace, shift_worker_trace)
+    commuter_trace, duty_cycle_mask, event_crowd_trace, flash_churn_mask,
+    markov_churn_mask, multi_area_trace, shift_worker_trace)
 from repro.mobility.random_walk import (  # noqa: F401
     MobilityConfig, init_mobility, mobility_step, simulate_trajectories, space_of)
 from repro.mobility.trace import (  # noqa: F401
-    synth_foursquare_trace, trace_to_colocation, trace_to_colocation_loop)
+    dwell_exchange_flags, synth_foursquare_trace, trace_to_colocation,
+    trace_to_colocation_loop)

@@ -17,10 +17,106 @@ tensors the scan engine consumes.
 - ``event_crowd_trace``  — sparse background visits plus scheduled events
   that pull a large user fraction into one venue simultaneously: bursts of
   many concurrent deliveries stress the freshness filter and aggregation.
+- ``multi_area_trace``   — N near-isolated cities of 4 spaces each with
+  rare cross-area travelers (generalizes the paper's 2-area layout).
+
+Churn masks
+-----------
+Real deployments also have devices that join, leave, and sleep mid-run.
+The ``*_mask`` generators below produce the ``[T, M]`` bool activity masks
+the scan engine threads through every path (``colocation["active"]``):
+
+- ``markov_churn_mask``  — each device is an independent two-state
+  (on/off) Markov chain: FedAvg-style random partial participation with
+  temporally correlated sessions rather than i.i.d. per-step sampling.
+- ``flash_churn_mask``   — a small always-on core plus scheduled flash
+  windows where most devices join at once and mass-exit at the end — the
+  availability profile of ``event_crowd_trace``.
+- ``duty_cycle_mask``    — periodic on/off duty cycles with per-device
+  phase jitter (commuters whose devices sleep off-shift).
+
+Every generator is deterministic per seed and guarantees at least one
+active mule per step (the engine's aggregation is well-defined either
+way, but an all-off step would make a replay trivially dead).
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def _ensure_one_active(mask: np.ndarray) -> np.ndarray:
+    """Force >= 1 active mule per step (deterministic: rotate over mules)."""
+    dead = ~mask.any(axis=1)
+    if dead.any():
+        t = np.nonzero(dead)[0]
+        mask[t, t % mask.shape[1]] = True
+    return mask
+
+
+def markov_churn_mask(seed: int, n_steps: int, n_mules: int,
+                      p_leave: float = 0.03, p_join: float = 0.12,
+                      p_init: float = 0.8) -> np.ndarray:
+    """Independent on/off Markov chain per device -> [T, M] bool.
+
+    An active device goes to sleep with ``p_leave`` per step; a sleeping
+    one wakes with ``p_join`` (stationary activity ~ p_join / (p_join +
+    p_leave)). Sessions are geometrically distributed, matching the
+    "devices join and leave mid-run" regime rather than per-step coin
+    flips.
+    """
+    rng = np.random.default_rng(seed)
+    mask = np.zeros((n_steps, n_mules), bool)
+    state = rng.random(n_mules) < p_init
+    for t in range(n_steps):
+        mask[t] = state
+        flip = rng.random(n_mules)
+        state = np.where(state, flip >= p_leave, flip < p_join)
+    return _ensure_one_active(mask)
+
+
+def flash_churn_mask(seed: int, n_steps: int, n_mules: int,
+                     n_flashes: int = 4, flash_len: int = 40,
+                     join_frac: float = 0.9,
+                     base_frac: float = 0.25) -> np.ndarray:
+    """Flash joins / mass exits -> [T, M] bool.
+
+    A ``base_frac`` core of devices stays on throughout; at each of
+    ``n_flashes`` evenly spaced windows a ``join_frac`` sample of the
+    population switches on (staggered arrivals over the first few steps)
+    and everyone outside the core mass-exits when the window closes —
+    the event-crowd availability profile.
+    """
+    rng = np.random.default_rng(seed)
+    core = rng.random(n_mules) < base_frac
+    if not core.any():
+        core[int(rng.integers(0, n_mules))] = True
+    mask = np.tile(core, (n_steps, 1))
+    gap = max(n_steps // max(n_flashes, 1), flash_len + 1)
+    for e in range(n_flashes):
+        t0 = min(e * gap + int(rng.integers(0, max(gap - flash_len, 1))),
+                 max(n_steps - flash_len, 0))
+        joiners = rng.random(n_mules) < join_frac
+        for u in np.nonzero(joiners)[0]:
+            off = int(rng.integers(0, 5))          # staggered arrivals
+            mask[t0 + off: t0 + flash_len, u] = True   # mass exit at close
+    return _ensure_one_active(mask)
+
+
+def duty_cycle_mask(seed: int, n_steps: int, n_mules: int,
+                    period: int = 120, on_frac: float = 0.55,
+                    jitter: int = 15) -> np.ndarray:
+    """Periodic per-device duty cycle -> [T, M] bool.
+
+    Device ``m`` is on for ``on_frac * period`` steps of every period,
+    phase-shifted by a per-device jitter — commuter devices that sleep
+    off-shift, with staggered shift starts.
+    """
+    rng = np.random.default_rng(seed)
+    phase = rng.integers(0, max(jitter, 1) + 1, n_mules)
+    on_len = max(int(on_frac * period), 1)
+    t = np.arange(n_steps)[:, None]
+    mask = ((t + phase[None, :]) % period) < on_len
+    return _ensure_one_active(mask)
 
 
 def _sorted_visits(visits) -> np.ndarray:
@@ -28,6 +124,43 @@ def _sorted_visits(visits) -> np.ndarray:
         return np.zeros((0, 4), np.int64)
     arr = np.array(visits, np.int64)
     return arr[np.argsort(arr[:, 2], kind="stable")]
+
+
+def multi_area_trace(seed: int, n_users: int = 30, n_places: int = 12,
+                     n_steps: int = 2000, n_areas: int = 3,
+                     p_travel: float = 0.01, min_visits: int = 6,
+                     max_visits: int = 18) -> np.ndarray:
+    """N near-isolated cities (paper Sec 4.1 generalized past 2 areas).
+
+    Places split into ``n_areas`` contiguous blocks of ``n_places //
+    n_areas`` spaces (area = place // block, matching ``trace_colocation``'s
+    area derivation). Each user lives in one home area and draws
+    foursquare-style visits from it; with probability ``p_travel`` a visit
+    crosses into another city — the paper's rare inter-area traveler
+    (0.715% in the Foursquare data).
+    """
+    if n_places != 4 * n_areas:
+        raise ValueError(
+            f"n_places={n_places} must be 4 * n_areas={n_areas}: the "
+            "colocation expansion derives area = place // 4 and space = "
+            "place % 4 (4 spaces per area throughout the harness)")
+    rng = np.random.default_rng(seed)
+    block = n_places // n_areas
+    home = rng.integers(0, n_areas, n_users)
+    visits = []
+    for u in range(n_users):
+        t = int(rng.integers(0, max(n_steps // 8, 1)))
+        for _ in range(int(rng.integers(min_visits, max_visits + 1))):
+            area = int(home[u])
+            if rng.random() < p_travel:
+                area = int(rng.integers(0, n_areas))
+            place = area * block + int(rng.integers(0, block))
+            dwell = int(rng.integers(6, 30))
+            if t + dwell >= n_steps:
+                break
+            visits.append((u, place, t, t + dwell))
+            t += dwell + int(rng.integers(5, 40))
+    return _sorted_visits(visits)
 
 
 def commuter_trace(seed: int, n_users: int = 20, n_places: int = 8,

@@ -39,25 +39,31 @@ def synth_foursquare_trace(seed: int, n_users: int = 40, n_places: int = 8,
         w = np.where(place_group == group_of[u], 10.0, 0.2)
         w = w * (1.0 / (1.0 + np.arange(n_places) % (n_places // n_groups)))
         w = w / w.sum()
-        t = int(rng.integers(0, n_steps // 8))
+        t = int(rng.integers(0, max(n_steps // 8, 1)))
         for _ in range(n_visits):
             place = int(rng.choice(n_places, p=w))
             dwell = int(rng.integers(6, 40))
             if t + dwell >= n_steps:
                 break
             visits.append((u, place, t, t + dwell))
-            t += dwell + int(rng.integers(5, n_steps // max(n_visits, 1) + 5))
+            t += dwell + int(rng.integers(
+                5, max(n_steps // max(n_visits, 1), 1) + 5))
     arr = np.array(sorted(visits, key=lambda v: v[2]), dtype=np.int64)
     return arr
 
 
 def trace_to_colocation(visits: np.ndarray, n_users: int, n_steps: int,
-                        exchange_steps: int = 3) -> np.ndarray:
+                        exchange_steps=3) -> np.ndarray:
     """Expand visits into per-step arrays — fully vectorized.
 
     Returns (fixed_id [T, M] int32 with -1 when not co-located,
              exchange [T, M] bool — True every `exchange_steps`-th
              consecutive step of a visit).
+
+    ``exchange_steps`` may also be an int array indexed by place id —
+    heterogeneous exchange tempos per space (a kiosk that completes a
+    hand-off in 1 step next to a gallery that needs 8): each dwell counts
+    against the cadence of the space it happens in.
 
     Per-visit fill uses one flat scatter (visits stay in t_in order, so a
     later visit overwrites an overlapping earlier one, like the reference
@@ -77,6 +83,19 @@ def trace_to_colocation(visits: np.ndarray, n_users: int, n_steps: int,
         rows = np.repeat(t_in, lens) + offs
         fixed_id[rows, np.repeat(u, lens)] = np.repeat(place, lens)
 
+    return fixed_id, dwell_exchange_flags(fixed_id, exchange_steps)
+
+
+def dwell_exchange_flags(fixed_id: np.ndarray, exchange_steps=3) -> np.ndarray:
+    """Completed-exchange flags from a filled ``[T, M]`` co-location grid.
+
+    A visit completes an exchange on every ``exchange_steps``-th
+    consecutive dwell step; ``exchange_steps`` may be a per-place array
+    (heterogeneous space tempos). Factored out of ``trace_to_colocation``
+    so the scenario registry can re-derive exchange schedules under a
+    declared set of ``SpaceSpec`` tempos.
+    """
+    n_steps, n_users = fixed_id.shape
     present = fixed_id >= 0
     prev = np.vstack([-np.ones((1, n_users), np.int32), fixed_id[:-1]])
     run_start = present & ((fixed_id != prev) | (prev < 0))
@@ -84,12 +103,31 @@ def trace_to_colocation(visits: np.ndarray, n_users: int, n_steps: int,
     start_t = np.where(run_start, t_grid, -1)
     last_start = np.maximum.accumulate(start_t, axis=0)
     dwell = np.where(present, t_grid - last_start + 1, 0)
-    exchange = present & (dwell % exchange_steps == 0)
-    return fixed_id, exchange
+    steps = _cadence_of(fixed_id, exchange_steps)
+    return present & (dwell % steps == 0)
+
+
+def _cadence_of(fixed_id: np.ndarray, exchange_steps) -> np.ndarray:
+    """Per-cell exchange cadence: scalar, or looked up by space id.
+
+    Only the -1 corridor sentinel is clamped; a place id past the end of
+    the per-place array is a misconfiguration (e.g. a 12-place trace with
+    an 8-space cadence array) and raises rather than silently reusing the
+    last entry.
+    """
+    if np.ndim(exchange_steps) == 0:
+        return np.asarray(exchange_steps, np.int64)
+    per_place = np.asarray(exchange_steps, np.int64)
+    top = int(fixed_id.max(initial=-1))
+    if top >= len(per_place):
+        raise ValueError(
+            f"place id {top} has no cadence: exchange_steps covers only "
+            f"{len(per_place)} places")
+    return per_place[np.maximum(fixed_id, 0)]
 
 
 def trace_to_colocation_loop(visits: np.ndarray, n_users: int, n_steps: int,
-                             exchange_steps: int = 3) -> np.ndarray:
+                             exchange_steps=3) -> np.ndarray:
     """Reference per-step-loop implementation of ``trace_to_colocation``
     (kept for parity tests; O(T·M) Python iterations)."""
     fixed_id = -np.ones((n_steps, n_users), np.int32)
@@ -101,6 +139,7 @@ def trace_to_colocation_loop(visits: np.ndarray, n_users: int, n_steps: int,
     for t in range(n_steps):
         same = (fixed_id[t] == prev) & (fixed_id[t] >= 0)
         dwell = np.where(same, dwell + 1, np.where(fixed_id[t] >= 0, 1, 0))
-        exchange[t] = (dwell > 0) & (dwell % exchange_steps == 0)
+        steps = _cadence_of(fixed_id[t], exchange_steps)
+        exchange[t] = (dwell > 0) & (dwell % steps == 0)
         prev = fixed_id[t]
     return fixed_id, exchange

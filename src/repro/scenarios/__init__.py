@@ -9,14 +9,18 @@
                                 method="gossip")    # any METHODS_MOBILE
 
 Replays are jit-cached (``engine.jit_cache_stats``) and multi-seed sweeps
-vmap into one compiled program (``sweep.run_sweep``).
+vmap into one compiled program (``sweep.run_sweep``). Scenarios with a
+``ChurnSpec`` emit an ``"active"`` [T, M] mask in their colocation dict —
+the engine threads it through every path (single-host, sweep, distributed)
+so inactive mules neither train nor exchange; ``SpaceSpec`` tuples give
+spaces heterogeneous exchange tempos.
 """
 from repro.scenarios.engine import (  # noqa: F401
     jit_cache_clear, jit_cache_stats, run_population,
     run_population_distributed, run_population_distributed_loop,
     run_population_loop)
 from repro.scenarios.registry import (  # noqa: F401
-    SCENARIOS, ScenarioSpec, get_scenario, list_scenarios, register,
-    trace_colocation, walk_colocation)
+    SCENARIOS, ChurnSpec, ScenarioSpec, SpaceSpec, get_scenario,
+    list_scenarios, register, trace_colocation, walk_colocation)
 from repro.scenarios.sweep import (  # noqa: F401
     run_sweep, run_sweep_distributed, stack_colocations, stack_trees)

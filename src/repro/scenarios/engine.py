@@ -61,6 +61,17 @@ Key discipline (the parity tests rely on reproducing it exactly):
 the parity reference (the same role ``trace_to_colocation_loop`` plays for
 the vectorized trace expansion): Python-level method dispatch, one jitted
 call per step. Tests pin scan-vs-loop bitwise equality per method.
+
+Population churn
+----------------
+Every path accepts an optional ``"active"`` ``[T, M]`` bool mask in the
+colocation dict (``repro.mobility``'s churn mask generators build them):
+inactive mules neither train nor exchange nor contribute to space
+aggregation for that step, on every method and on the distributed engine
+alike (the mask ANDs into the delivery mask before the fused psum, so
+distributed == single-host under churn). The mask is *data*, not a static:
+dense (absent mask == all-ones) and churned runs of the same shape share
+one cache entry and one compiled program — zero retraces.
 """
 from __future__ import annotations
 
@@ -103,7 +114,14 @@ def _sig(tree: Any) -> Any:
 
 
 def _colocation_tensors(colocation, n_steps=None):
-    """Normalize a colocation dict to (fid, exch, pos, area) jnp arrays."""
+    """Normalize a colocation dict to (fid, exch, pos, area, act) arrays.
+
+    ``act`` is the per-step activity (churn) mask ``[T, M]`` bool from the
+    ``"active"`` key; absent, it defaults to all-ones — the dense
+    population. Because the mask is data (same shape/dtype either way), a
+    dense and a churned run of the same schedule shape share one compiled
+    replay.
+    """
     fid = jnp.asarray(np.asarray(colocation["fixed_id"]), jnp.int32)
     exch = jnp.asarray(np.asarray(colocation["exchange"]), bool)
     t, m = fid.shape[-2], fid.shape[-1]
@@ -113,7 +131,10 @@ def _colocation_tensors(colocation, n_steps=None):
     area = colocation.get("area")
     area = (jnp.zeros(fid.shape[:-2] + (m,), jnp.int32) if area is None
             else jnp.asarray(np.asarray(area), jnp.int32))
-    return fid, exch, pos, area
+    act = colocation.get("active")
+    act = (jnp.ones(fid.shape, bool) if act is None
+           else jnp.asarray(np.asarray(act), bool))
+    return fid, exch, pos, area, act
 
 
 def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
@@ -127,6 +148,10 @@ def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
     ``step_builder(area) -> step_fn`` overrides the per-step update (the
     distributed engine injects its shard-local collective step here); the
     default is the single-host ``make_method_step`` dispatch.
+
+    The activity mask rides the scan as one more ``[T, M]`` xs column:
+    step ``t`` hands ``act[t]`` to the method step as ``info["active"]``
+    and gates ``last_fid`` (a sleeping mule records no visit).
     """
     dynamic = callable(batches)
     batch_fn = batches if dynamic else None
@@ -134,7 +159,8 @@ def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
         step_builder = lambda area: make_method_step(method, train_fn, cfg,
                                                      area)
 
-    def replay(state, fid, exch, pos, area, stacked_batches, context, key):
+    def replay(state, fid, exch, pos, area, act, stacked_batches, context,
+               key):
         _STATS["traces"] += 1          # python side effect: fires per trace
         step_fn = step_builder(area)
         n_mules = fid.shape[1]
@@ -143,20 +169,20 @@ def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
         def body(carry, xs):
             st, last = carry
             if dynamic:
-                fid_t, exch_t, pos_t, t = xs
+                fid_t, exch_t, pos_t, act_t, t = xs
                 kb, ks = jax.random.split(jax.random.fold_in(key, t))
                 bt = (batch_fn(kb, t, context) if has_context
                       else batch_fn(kb, t))
             else:
-                fid_t, exch_t, pos_t, t, bt = xs
+                fid_t, exch_t, pos_t, act_t, t, bt = xs
                 ks = jax.random.fold_in(key, t)
             st = step_fn(st, {"fixed_id": fid_t, "exchange": exch_t,
-                              "pos": pos_t, "t": t}, bt, ks)
-            last = jnp.where(fid_t >= 0, fid_t, last)
+                              "pos": pos_t, "active": act_t, "t": t}, bt, ks)
+            last = jnp.where((fid_t >= 0) & act_t, fid_t, last)
             return (st, last), None
 
         def xs_slice(lo, hi):
-            xs = (fid[lo:hi], exch[lo:hi], pos[lo:hi], ts[lo:hi])
+            xs = (fid[lo:hi], exch[lo:hi], pos[lo:hi], act[lo:hi], ts[lo:hi])
             if not dynamic:
                 xs = xs + (jax.tree.map(lambda l: l[lo:hi], stacked_batches),)
             return xs
@@ -218,13 +244,14 @@ def _distributed_specs(state, batches, dcfg, *, vmapped: bool):
     in_specs = (state_specs,
                 P(*lead, None, ax), P(*lead, None, ax),   # fid, exch
                 P(*lead, None, ax), P(*lead, ax),         # pos, area
+                P(*lead, None, ax),                       # activity mask
                 batch_specs, P(), P())                    # batches, ctx, key
     out_specs = (state_specs, P(*lead, ax), P())          # state, last, evals
     return in_specs, out_specs
 
 
-def get_compiled_replay(state, fid, exch, pos, area, batches, context, key,
-                        train_fn: TrainFn, cfg: PopulationConfig, *,
+def get_compiled_replay(state, fid, exch, pos, area, act, batches, context,
+                        key, train_fn: TrainFn, cfg: PopulationConfig, *,
                         method: str, eval_every: Optional[int],
                         eval_fn: Optional[Callable],
                         vmapped: bool = False, donate: bool = False,
@@ -252,7 +279,7 @@ def get_compiled_replay(state, fid, exch, pos, area, batches, context, key,
     cache_key = (
         kind, method, cfg, eval_every,
         n_steps, train_fn, eval_fn, batches if dynamic else None,
-        _sig(state), _sig((fid, exch, pos, area)),
+        _sig(state), _sig((fid, exch, pos, area, act)),
         None if dynamic else _sig(batches),
         None if context is None else _sig(context), _sig(key),
         donate, None if mesh is None else (mesh, dcfg),
@@ -300,7 +327,12 @@ def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
     colocation: {"fixed_id": [T, M] int32 (-1 = corridor),
                  "exchange": [T, M] bool}; the peer-encounter methods also
                  read "pos" [T, M, 2] and "area" [M] (zero-filled when
-                 absent; extra keys ignored).
+                 absent; extra keys ignored). An optional "active" [T, M]
+                 bool churn mask switches mules off per step: inactive
+                 mules neither train, nor exchange, nor count toward space
+                 aggregation, and record no ``last_fid`` visit (all-ones ==
+                 the dense population, bitwise — same compiled program,
+                 the mask is data).
     batches:    callable ``(key, t[, context]) -> {"fixed": ..., "mule":
                 ...}`` sampled inside the scan (traceable), or a pytree of
                 stacked ``[T, ...]`` leaves consumed as scan inputs.
@@ -321,15 +353,15 @@ def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
     ``aux = {"last_fid": [M], "eval_steps": np [E], "evals": stacked/None}``
     where eval step ``i`` is taken after step ``(i+1)*eval_every - 1``.
     """
-    fid, exch, pos, area = _colocation_tensors(colocation)
+    fid, exch, pos, area, act = _colocation_tensors(colocation)
     n_steps = fid.shape[0]
     stacked = None if callable(batches) else batches
-    fn = get_compiled_replay(state, fid, exch, pos, area, batches, context,
-                             key, train_fn, cfg, method=method,
+    fn = get_compiled_replay(state, fid, exch, pos, area, act, batches,
+                             context, key, train_fn, cfg, method=method,
                              eval_every=eval_every, eval_fn=eval_fn,
                              donate=donate)
-    state, last, evals = fn(state, fid, exch, pos, area, stacked, context,
-                            key)
+    state, last, evals = fn(state, fid, exch, pos, area, act, stacked,
+                            context, key)
     n_ev = n_steps // eval_every if (eval_fn is not None and eval_every) else 0
     steps = (np.arange(n_ev) + 1) * eval_every - 1 if n_ev else \
         np.zeros((0,), int)
@@ -352,25 +384,37 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
     a callable) the loop calls ``batches(kb, t, context)``, so parity tests
     cover context-carrying runs too.
 
+    Churn: a colocation ``"active"`` mask replays with the same per-step
+    Python dispatch — inactive mules skip training/exchange and keep their
+    models via ``apply_activity_mask``, mirroring the scan's masked method
+    steps operation for operation. Without the key the loop is the
+    pre-mask driver verbatim.
+
     Returns ``(final_state, last_fid)``.
     """
     from repro.baselines import gossip_step, local_step, oppcl_step
+    from repro.core.population import apply_activity_mask
 
     step = jax.jit(lambda s, i, b, k: population_step(s, i, b, train_fn,
                                                       cfg, k))
     jit_local = jax.jit(lambda m, b, k: local_step(m, b, train_fn, k))
     jit_gossip = jax.jit(
-        lambda m, p, a, b, k: gossip_step(m, p, a, b, train_fn, k))
+        lambda m, p, a, b, k, act: gossip_step(m, p, a, b, train_fn, k,
+                                               active=act))
     jit_oppcl = jax.jit(
-        lambda m, p, a, b, k: oppcl_step(m, p, a, b, train_fn, k))
+        lambda m, p, a, b, k, act: oppcl_step(m, p, a, b, train_fn, k,
+                                              active=act))
+    mask_sel = jax.jit(apply_activity_mask)
 
-    fid_T, exch_T, pos_T, area = _colocation_tensors(colocation)
+    fid_T, exch_T, pos_T, area, act_T = _colocation_tensors(colocation)
+    masked = "active" in colocation and colocation["active"] is not None
     n_steps, n_mules = fid_T.shape
     dynamic = callable(batches)
     state = dict(state)
     last_fid = jnp.zeros((n_mules,), jnp.int32)
     for t in range(n_steps):
         fid, exch, pos = fid_T[t], exch_T[t], pos_T[t]
+        act = act_T[t] if masked else None
         if dynamic:
             kb, ks = jax.random.split(jax.random.fold_in(key, t))
             bt = batches(kb, t, context) if context is not None else \
@@ -378,29 +422,42 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
         else:
             ks = jax.random.fold_in(key, t)
             bt = jax.tree.map(lambda l: l[t], batches)
-        last_fid = jnp.where(fid >= 0, fid, last_fid)
+        present = (fid >= 0) if act is None else ((fid >= 0) & act)
+        last_fid = jnp.where(present, fid, last_fid)
+        info = {"fixed_id": fid, "exchange": exch}
+        if act is not None:
+            info["active"] = act
         if method == "mlmule":
-            state = step(state, {"fixed_id": fid, "exchange": exch}, bt, ks)
+            state = step(state, info, bt, ks)
         elif method == "local":
             side = "fixed_models" if cfg.mode == "fixed" else "mule_models"
-            state[side] = jit_local(
+            trained = jit_local(
                 state[side], bt["fixed" if cfg.mode == "fixed" else "mule"],
                 ks)
+            if side == "mule_models":
+                trained = mask_sel(act, trained, state[side])
+            state[side] = trained
         elif method == "gossip":
             # peer exchange also costs 3 time steps (paper Sec 4.3.1)
             if t % 3 == 2:
-                state["mule_models"] = jit_gossip(
-                    state["mule_models"], pos, area, bt["mule"], ks)
+                new = jit_gossip(state["mule_models"], pos, area, bt["mule"],
+                                 ks, act)
+                state["mule_models"] = mask_sel(act, new,
+                                                state["mule_models"])
         elif method == "oppcl":
             if t % 3 == 2:
-                state["mule_models"] = jit_oppcl(
-                    state["mule_models"], pos, area, bt["mule"], ks)
+                new = jit_oppcl(state["mule_models"], pos, area, bt["mule"],
+                                ks, act)
+                state["mule_models"] = mask_sel(act, new,
+                                                state["mule_models"])
         elif method == "mlmule+gossip":
-            state = step(state, {"fixed_id": fid, "exchange": exch}, bt, ks)
+            state = step(state, info, bt, ks)
             if t % 3 == 2:
                 kg = jax.random.fold_in(ks, 1)
-                state["mule_models"] = jit_gossip(
-                    state["mule_models"], pos, area, bt["mule"], kg)
+                new = jit_gossip(state["mule_models"], pos, area, bt["mule"],
+                                 kg, act)
+                state["mule_models"] = mask_sel(act, new,
+                                                state["mule_models"])
         else:
             raise ValueError(method)
     return state, last_fid
@@ -456,16 +513,16 @@ def run_population_distributed(state: Dict[str, Any],
 
     Returns ``(final_state, aux)`` exactly like ``run_population``.
     """
-    fid, exch, pos, area = _colocation_tensors(colocation)
+    fid, exch, pos, area, act = _colocation_tensors(colocation)
     n_steps = fid.shape[0]
     _check_mule_sharding(fid.shape[1], mesh, dcfg)
     stacked = None if callable(batches) else batches
-    fn = get_compiled_replay(state, fid, exch, pos, area, batches, context,
-                             key, train_fn, dcfg.pop, method=method,
+    fn = get_compiled_replay(state, fid, exch, pos, area, act, batches,
+                             context, key, train_fn, dcfg.pop, method=method,
                              eval_every=eval_every, eval_fn=eval_fn,
                              donate=donate, mesh=mesh, dcfg=dcfg)
-    state, last, evals = fn(state, fid, exch, pos, area, stacked, context,
-                            key)
+    state, last, evals = fn(state, fid, exch, pos, area, act, stacked,
+                            context, key)
     n_ev = n_steps // eval_every if (eval_fn is not None and eval_every) else 0
     steps = (np.arange(n_ev) + 1) * eval_every - 1 if n_ev else \
         np.zeros((0,), int)
@@ -492,7 +549,7 @@ def run_population_distributed_loop(state: Dict[str, Any],
     from jax.sharding import PartitionSpec as P
     from repro.core.distributed import make_distributed_method_step
 
-    fid_T, exch_T, pos_T, area = _colocation_tensors(colocation)
+    fid_T, exch_T, pos_T, area, act_T = _colocation_tensors(colocation)
     n_steps, n_mules = fid_T.shape
     _check_mule_sharding(n_mules, mesh, dcfg)
     ax = dcfg.data_axis
@@ -502,7 +559,7 @@ def run_population_distributed_loop(state: Dict[str, Any],
         for k, v in state.items()
     }
     info_specs = {"fixed_id": P(ax), "exchange": P(ax), "pos": P(ax),
-                  "t": P()}
+                  "active": P(ax), "t": P()}
     step_core = make_distributed_method_step(method, train_fn, dcfg)
     step = jax.jit(shard_map(
         step_core, mesh=mesh,
@@ -512,7 +569,7 @@ def run_population_distributed_loop(state: Dict[str, Any],
     dynamic = callable(batches)
     last_fid = jnp.zeros((n_mules,), jnp.int32)
     for t in range(n_steps):
-        fid, exch, pos = fid_T[t], exch_T[t], pos_T[t]
+        fid, exch, pos, act = fid_T[t], exch_T[t], pos_T[t], act_T[t]
         if dynamic:
             kb, ks = jax.random.split(jax.random.fold_in(key, t))
             bt = batches(kb, t, context) if context is not None else \
@@ -520,8 +577,8 @@ def run_population_distributed_loop(state: Dict[str, Any],
         else:
             ks = jax.random.fold_in(key, t)
             bt = jax.tree.map(lambda l: l[t], batches)
-        info = {"fixed_id": fid, "exchange": exch, "pos": pos,
+        info = {"fixed_id": fid, "exchange": exch, "pos": pos, "active": act,
                 "t": jnp.asarray(t, jnp.int32)}
         state = step(state, info, bt, ks)
-        last_fid = jnp.where(fid >= 0, fid, last_fid)
+        last_fid = jnp.where((fid >= 0) & act, fid, last_fid)
     return state, last_fid

@@ -13,22 +13,77 @@ Co-location builders return numpy arrays:
   exchange  [T, M] bool    completed-exchange flags
   pos       [T, M, 2] f32  positions (zeros for check-in traces)
   area      [M] int32      each mule's area (constant; areas are isolated)
+  active    [T, M] bool    churn mask (optional; absent == dense)
   init_space/init_area [M] initial space/area (seeds the data partition)
+
+Churn and heterogeneous spaces are declarative: a ``ChurnSpec`` on the
+scenario picks one of the ``repro.mobility`` mask generators (``register``
+folds the mask into every build), and a tuple of ``SpaceSpec`` gives each
+space its own exchange tempo, folded into the trace expansion's dwell
+cadence.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.mobility import (MobilityConfig, commuter_trace, event_crowd_trace,
-                            init_mobility, shift_worker_trace,
+from repro.mobility import (MobilityConfig, commuter_trace,
+                            duty_cycle_mask, dwell_exchange_flags,
+                            event_crowd_trace, flash_churn_mask,
+                            init_mobility, markov_churn_mask,
+                            multi_area_trace, shift_worker_trace,
                             simulate_trajectories, space_of,
                             synth_foursquare_trace, trace_to_colocation)
 
 Colocation = Dict[str, np.ndarray]
+
+_CHURN_GENERATORS = {
+    "markov": markov_churn_mask,
+    "flash": flash_churn_mask,
+    "duty_cycle": duty_cycle_mask,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnSpec:
+    """Declarative population churn: which mask generator, with what knobs.
+
+    ``kind`` selects from ``repro.mobility``'s generators (markov | flash |
+    duty_cycle); ``params`` are its keyword arguments. ``seed_offset``
+    decorrelates the mask draw from the mobility draw of the same scenario
+    seed while keeping builds deterministic per seed.
+    """
+    kind: str = "markov"
+    params: Tuple[Tuple[str, float], ...] = ()
+    seed_offset: int = 7919
+
+    def mask(self, seed: int, n_steps: int, n_mules: int) -> np.ndarray:
+        if self.kind not in _CHURN_GENERATORS:
+            raise ValueError(f"unknown churn kind {self.kind!r}; expected "
+                             f"one of {sorted(_CHURN_GENERATORS)}")
+        return _CHURN_GENERATORS[self.kind](seed + self.seed_offset, n_steps,
+                                            n_mules, **dict(self.params))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceSpec:
+    """Per-space knobs folded into the colocation build.
+
+    ``exchange_steps`` is this space's exchange tempo — how many
+    consecutive dwell steps complete one model hand-off (the homogeneous
+    engines hardcoded 3 everywhere).
+    """
+    exchange_steps: int = 3
+
+
+def _cadence(spaces: Tuple[SpaceSpec, ...]):
+    """Per-place exchange_steps array for ``trace_colocation`` (or 3)."""
+    if not spaces:
+        return 3
+    return np.array([sp.exchange_steps for sp in spaces], np.int64)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,21 +93,46 @@ class ScenarioSpec:
     mode: str = "mobile"                    # which side trains (fixed|mobile)
     dist: str = "shards"                    # data partition selector
     task: str = "image"                     # image | har
+    n_fixed: int = 8                        # spaces (= valid fixed ids)
+    churn: Optional[ChurnSpec] = None       # device join/leave mask
+    spaces: Tuple[SpaceSpec, ...] = ()      # per-space exchange tempos
     description: str = ""
 
 
 SCENARIOS: Dict[str, ScenarioSpec] = {}
 
 
+def _folded(build: Callable[..., Colocation], churn: Optional[ChurnSpec],
+            spaces: Tuple[SpaceSpec, ...]) -> Callable[..., Colocation]:
+    """Wrap a builder so the spec's churn/space declarations take effect."""
+    def with_spec(seed: int, n_mules: int, n_steps: int) -> Colocation:
+        co = build(seed, n_mules, n_steps)
+        if spaces:
+            co["exchange"] = dwell_exchange_flags(
+                np.asarray(co["fixed_id"]), _cadence(spaces))
+        if churn is not None:
+            co["active"] = churn.mask(seed, n_steps, n_mules)
+        return co
+    return with_spec
+
+
 def register(spec: ScenarioSpec) -> ScenarioSpec:
+    """Add a scenario; declared ``churn``/``spaces`` fold into every build
+    (the mask is generated, and exchange flags are re-derived from dwell
+    runs under the per-space tempos), so the declarations on the spec are
+    the single source of truth."""
+    if spec.churn is not None or spec.spaces:
+        spec = dataclasses.replace(
+            spec, colocation=_folded(spec.colocation, spec.churn,
+                                     spec.spaces))
     SCENARIOS[spec.name] = spec
     return spec
 
 
 def get_scenario(name: str) -> ScenarioSpec:
     if name not in SCENARIOS:
-        raise KeyError(f"unknown scenario {name!r}; "
-                       f"available: {', '.join(list_scenarios())}")
+        raise ValueError(f"unknown scenario {name!r}; available: "
+                         f"{', '.join(list_scenarios())}")
     return SCENARIOS[name]
 
 
@@ -90,7 +170,13 @@ def walk_colocation(seed: int, n_mules: int, n_steps: int,
 
 def trace_colocation(visits: np.ndarray, n_mules: int,
                      n_steps: int) -> Colocation:
-    """Expand a (user, place, t_in, t_out) visit log into engine tensors."""
+    """Expand a (user, place, t_in, t_out) visit log into engine tensors.
+
+    Heterogeneous space tempos are a *scenario* declaration: ``register``
+    re-derives the exchange flags from the spec's ``SpaceSpec`` tuple
+    (``dwell_exchange_flags``), so the expansion here always uses the
+    homogeneous default cadence.
+    """
     fid, exch = trace_to_colocation(visits, n_mules, n_steps)
     present = fid >= 0
     any_visit = present.any(axis=0)
@@ -106,10 +192,10 @@ def trace_colocation(visits: np.ndarray, n_mules: int,
     }
 
 
-def _from_trace(gen: Callable[..., np.ndarray], **gen_kw):
+def _from_trace(gen: Callable[..., np.ndarray], n_places: int = 8, **gen_kw):
     def build(seed: int, n_mules: int, n_steps: int) -> Colocation:
-        visits = gen(seed, n_users=n_mules, n_places=8, n_steps=n_steps,
-                     **gen_kw)
+        visits = gen(seed, n_users=n_mules, n_places=n_places,
+                     n_steps=n_steps, **gen_kw)
         return trace_colocation(visits, n_mules, n_steps)
     return build
 
@@ -146,3 +232,43 @@ register(ScenarioSpec(
     mode="mobile", dist="shards",
     description="Sparse background plus mass events: bursts of simultaneous "
                 "deliveries stress freshness filtering and aggregation."))
+
+
+# -- churn / heterogeneous-space scenarios ----------------------------------
+
+register(ScenarioSpec(
+    name="commuter_churn", colocation=_from_trace(commuter_trace),
+    mode="mobile", dist="shards",
+    churn=ChurnSpec(kind="markov",
+                    params=(("p_leave", 0.04), ("p_join", 0.10))),
+    description="Commuter mobility with session churn: devices drop off and "
+                "rejoin in geometric sessions (Markov on/off), so delivery "
+                "schedules thin out unpredictably mid-run."))
+
+register(ScenarioSpec(
+    name="event_crowd_flash", colocation=_from_trace(event_crowd_trace),
+    mode="mobile", dist="shards",
+    churn=ChurnSpec(kind="flash",
+                    params=(("n_flashes", 4), ("flash_len", 40),
+                            ("base_frac", 0.25), ("join_frac", 0.9))),
+    description="Event crowds whose devices are only awake around events: "
+                "flash joins at each venue window, mass exits when it "
+                "closes, a small always-on core in between."))
+
+register(ScenarioSpec(
+    name="multi_area_3city",
+    colocation=_from_trace(multi_area_trace, n_places=12, n_areas=3),
+    mode="mobile", dist="shards", n_fixed=12,
+    description="Three near-isolated cities (12 spaces, 3 areas) with rare "
+                "cross-city travelers: affinity groups must form per city "
+                "without cross-area leakage."))
+
+register(ScenarioSpec(
+    name="mixed_cadence",
+    colocation=_from_trace(commuter_trace),
+    mode="mobile", dist="shards",
+    spaces=tuple(SpaceSpec(exchange_steps=s)
+                 for s in (1, 2, 4, 8, 3, 6, 2, 5)),
+    description="Heterogeneous exchange tempos: each space completes a "
+                "hand-off in its own number of dwell steps (1..8), so "
+                "fast kiosks and slow galleries coexist in one run."))

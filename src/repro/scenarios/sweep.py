@@ -53,11 +53,16 @@ def stack_trees(trees: Sequence[Any]) -> Any:
 
 
 def stack_colocations(cos: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
-    """Stack per-seed colocation dicts into [S, T, M] engine tensors."""
+    """Stack per-seed colocation dicts into [S, T, M] engine tensors.
+
+    The churn mask stacks too (``active`` [S, T, M]); seeds without one
+    stack as all-ones lanes, so dense and churned seeds can share a sweep.
+    """
     per = [_colocation_tensors(co) for co in cos]
-    fid, exch, pos, area = (stack_trees([p[i] for p in per])
-                            for i in range(4))
-    return {"fixed_id": fid, "exchange": exch, "pos": pos, "area": area}
+    fid, exch, pos, area, act = (stack_trees([p[i] for p in per])
+                                 for i in range(5))
+    return {"fixed_id": fid, "exchange": exch, "pos": pos, "area": area,
+            "active": act}
 
 
 def run_sweep(states: Dict[str, Any], colocations: Dict[str, Any],
@@ -74,7 +79,9 @@ def run_sweep(states: Dict[str, Any], colocations: Dict[str, Any],
                  over per-seed ``init_population`` results).
     colocations: colocation dict with ``[S, T, M]`` tensors
                  (``stack_colocations``), or a single unstacked ``[T, M]``
-                 dict shared by every seed (broadcast here).
+                 dict shared by every seed (broadcast here). A per-seed
+                 ``"active"`` churn mask vmaps with the rest (absent ==
+                 dense).
     batches:     traceable callable ``(key, t[, context]) -> batch dict``
                  (shared code; per-seed data goes through ``context``), or
                  a pytree of ``[S, T, ...]`` stacked leaves.
@@ -95,11 +102,11 @@ def run_sweep(states: Dict[str, Any], colocations: Dict[str, Any],
     if donate and not isinstance(methods, str):
         raise ValueError("donate=True replays would reuse donated state "
                          "across methods; pass a single method")
-    fid, exch, pos, area = _colocation_tensors(colocations)
+    fid, exch, pos, area, act = _colocation_tensors(colocations)
     if fid.ndim == 2:                      # shared schedule -> broadcast
         s = jax.tree.leaves(keys)[0].shape[0]
-        fid, exch, pos, area = (jnp.broadcast_to(l, (s,) + l.shape)
-                                for l in (fid, exch, pos, area))
+        fid, exch, pos, area, act = (jnp.broadcast_to(l, (s,) + l.shape)
+                                     for l in (fid, exch, pos, area, act))
     n_steps = int(fid.shape[1])
     if mesh is not None:
         from repro.scenarios.engine import _check_mule_sharding
@@ -107,12 +114,12 @@ def run_sweep(states: Dict[str, Any], colocations: Dict[str, Any],
     stacked = None if callable(batches) else batches
 
     def one(method: str) -> SweepResult:
-        fn = get_compiled_replay(states, fid, exch, pos, area, batches,
+        fn = get_compiled_replay(states, fid, exch, pos, area, act, batches,
                                  context, keys, train_fn, cfg, method=method,
                                  eval_every=eval_every, eval_fn=eval_fn,
                                  vmapped=True, donate=donate, mesh=mesh,
                                  dcfg=dcfg)
-        final, last, evals = fn(states, fid, exch, pos, area, stacked,
+        final, last, evals = fn(states, fid, exch, pos, area, act, stacked,
                                 context, keys)
         n_ev = (n_steps // eval_every
                 if (eval_fn is not None and eval_every) else 0)

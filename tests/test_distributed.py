@@ -226,3 +226,38 @@ with mesh:
 assert bool(jnp.isfinite(metrics["loss"]))
 print("OK", float(metrics["loss"]))
 """, n_devices=4)
+
+
+@pytest.mark.slow
+def test_distributed_churn_parity_multidevice(multi_device_runner):
+    """Churn on a real (2, 4) pod x data mesh: the masked shard_map scan
+    matches the masked per-step driver bitwise, and (accept-all filter)
+    matches the single-host masked engine — inactive mules drop out of the
+    fused psum payload identically on every shard."""
+    multi_device_runner(_SCAN_PRELUDE + """
+from repro.mobility import markov_churn_mask
+for mode in ("fixed", "mobile"):
+    pop, co, batch_fn, train_fn, pcfg = linear_setup(
+        mode, init_threshold=1e9, warmup=10**6)
+    co = dict(co)
+    co["active"] = markov_churn_mask(77, T, M, p_leave=0.2, p_join=0.3)
+    assert co["active"].any() and not co["active"].all()
+    dcfg = DistributedConfig(pop=pcfg)
+    dstate = to_distributed_state(pop, dcfg)
+    key = jax.random.PRNGKey(7)
+    f1, aux = run_population_distributed(dstate, co, batch_fn, train_fn,
+                                         dcfg, mesh, key)
+    f2, last2 = run_population_distributed_loop(
+        dstate, co, batch_fn, train_fn, dcfg, mesh, key)
+    assert_bitwise(f1, f2, ("scan-vs-loop", mode))
+    assert np.array_equal(np.asarray(aux["last_fid"]), np.asarray(last2))
+    host, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key)
+    for k in ("fixed_models", "mule_models", "mule_ts"):
+        # across real shards the psum's reduction order differs from the
+        # single-host matmul, so host agreement is to tolerance (the
+        # bitwise host-vs-dist pin lives in the 1-device fast tier)
+        for a, b in zip(jax.tree.leaves(host[k]), jax.tree.leaves(f1[k])):
+            err = float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+            assert err < 1e-5, ("host-vs-dist", mode, k, err)
+print("OK")
+""")

@@ -169,3 +169,91 @@ def test_donated_replay_matches_undonated():
     don2, _ = run_population(pop_d2, co, batch_fn, train_fn, pcfg, key,
                              donate=True)
     _assert_trees_bitwise(ref2, don2)
+
+
+# ---------------------------------------------------------------------------
+# population churn on the distributed engine
+# ---------------------------------------------------------------------------
+
+
+def _churned(co, seed=0):
+    from repro.mobility import flash_churn_mask
+    co = dict(co)
+    co["active"] = flash_churn_mask(40 + seed, T, M, n_flashes=2,
+                                    flash_len=5, base_frac=0.3)
+    assert co["active"].any() and not co["active"].all()
+    return co
+
+
+@pytest.mark.parametrize("mode", ["fixed", "mobile"])
+@pytest.mark.parametrize("stat", ["median", "meanstd"])
+def test_churn_distributed_scan_matches_loop(mode, stat):
+    """The mask folds into the fused psum payload: masked shard_map scan ==
+    masked per-step shard_map driver, bitwise."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup(mode, stat=stat)
+    co = _churned(co)
+    dcfg = DistributedConfig(pop=pcfg)
+    dstate = to_distributed_state(pop, dcfg)
+    mesh, key = _mesh(), jax.random.PRNGKey(13)
+    final, aux = run_population_distributed(dstate, co, batch_fn, train_fn,
+                                            dcfg, mesh, key)
+    ref, ref_last = run_population_distributed_loop(
+        dstate, co, batch_fn, train_fn, dcfg, mesh, key)
+    _assert_trees_bitwise(final, ref)
+    np.testing.assert_array_equal(np.asarray(aux["last_fid"]),
+                                  np.asarray(ref_last))
+
+
+@pytest.mark.parametrize("mode", ["fixed", "mobile"])
+@pytest.mark.parametrize("method", ["mlmule", "local"])
+def test_churn_distributed_matches_single_host_bitwise(mode, method):
+    """distributed == single-host under churn (1-device mesh is exact, so
+    bitwise — inactive mules vanish identically from both reductions)."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup(
+        mode, init_threshold=1e9, warmup=10**6)
+    co = _churned(co, seed=mode == "mobile")
+    dcfg = DistributedConfig(pop=pcfg)
+    key = jax.random.PRNGKey(17)
+    host, haux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                                method=method)
+    dist, daux = run_population_distributed(
+        to_distributed_state(pop, dcfg), co, batch_fn, train_fn, dcfg,
+        _mesh(), key, method=method)
+    for k in ("fixed_models", "mule_models", "mule_ts"):
+        _assert_trees_bitwise(host[k], dist[k])
+    np.testing.assert_array_equal(np.asarray(haux["last_fid"]),
+                                  np.asarray(daux["last_fid"]))
+
+
+def test_churn_all_ones_mask_matches_dense_distributed():
+    """All-ones mask == dense distributed replay, bitwise."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("fixed")
+    dcfg = DistributedConfig(pop=pcfg)
+    key = jax.random.PRNGKey(19)
+    dense, _ = run_population_distributed(
+        to_distributed_state(pop, dcfg), co, batch_fn, train_fn, dcfg,
+        _mesh(), key)
+    co_ones = dict(co, active=np.ones((T, M), bool))
+    masked, _ = run_population_distributed(
+        to_distributed_state(pop, dcfg), co_ones, batch_fn, train_fn, dcfg,
+        _mesh(), key)
+    _assert_trees_bitwise(masked, dense)
+
+
+def test_churn_distributed_sweep_matches_sequential():
+    """Per-seed churn masks ride the distributed sweep's seed vmap."""
+    seeds = [0, 1]
+    setups = [_linear_setup("fixed", seed=s) for s in seeds]
+    _, _, batch_fn, train_fn, pcfg = setups[0]
+    cos = [_churned(st[1], seed=s) for s, st in zip(seeds, setups)]
+    dcfg = DistributedConfig(pop=pcfg)
+    mesh = _mesh()
+    keys = [jax.random.PRNGKey(500 + s) for s in seeds]
+    finals = [run_population_distributed(
+        to_distributed_state(st, dcfg), co, batch_fn, train_fn, dcfg, mesh,
+        k)[0] for (st, _, _, _, _), co, k in zip(setups, cos, keys)]
+    states = stack_trees([to_distributed_state(s[0], dcfg) for s in setups])
+    vf, _ = run_sweep_distributed(states, stack_colocations(cos), batch_fn,
+                                  train_fn, dcfg, mesh, stack_trees(keys))
+    for i in range(len(seeds)):
+        _assert_trees_bitwise(jax.tree.map(lambda l: l[i], vf), finals[i])

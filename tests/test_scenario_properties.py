@@ -1,0 +1,142 @@
+"""Property-based harness over the whole scenario registry.
+
+Every scenario in ``SCENARIOS`` — present and future — must produce engine-
+consumable colocation tensors for any (seed, n_mules, n_steps): valid space
+ids, [T, M] shapes, boolean churn masks that never switch the whole
+population off, and builds that are deterministic per seed. Runs under real
+``hypothesis`` in CI and under the fixed-seed fallback sweep
+(``repro.testing.hypo``) in the tier-1 container.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: fixed-seed fallback sweep
+    from repro.testing.hypo import given, settings, strategies as st
+
+from repro.mobility import (duty_cycle_mask, flash_churn_mask,
+                            markov_churn_mask)
+from repro.scenarios import SCENARIOS, get_scenario, list_scenarios
+
+
+def _check_colocation(name, spec, co, n_mules, n_steps):
+    fid = np.asarray(co["fixed_id"])
+    exch = np.asarray(co["exchange"])
+    assert fid.shape == (n_steps, n_mules), f"{name}: fixed_id shape"
+    assert exch.shape == (n_steps, n_mules), f"{name}: exchange shape"
+    assert exch.dtype == bool, f"{name}: exchange dtype"
+    # colocation values are valid space ids: -1 (corridor) .. n_fixed-1
+    assert fid.min() >= -1, f"{name}: fixed_id below -1"
+    assert fid.max() < spec.n_fixed, \
+        f"{name}: fixed_id {fid.max()} >= n_fixed {spec.n_fixed}"
+    # an exchange needs a co-location to complete
+    assert not (exch & (fid < 0)).any(), f"{name}: exchange without visit"
+    if "pos" in co:
+        assert np.asarray(co["pos"]).shape == (n_steps, n_mules, 2), \
+            f"{name}: pos shape"
+    if "area" in co:
+        assert np.asarray(co["area"]).shape == (n_mules,), f"{name}: area"
+    act = np.asarray(co.get("active", np.ones(fid.shape, bool)))
+    assert act.shape == (n_steps, n_mules), f"{name}: active shape"
+    assert act.dtype == bool, f"{name}: active dtype"
+    assert act.any(axis=1).all(), f"{name}: step with zero active mules"
+    if spec.churn is not None:
+        assert "active" in co, f"{name}: ChurnSpec but no active mask"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       n_mules=st.integers(min_value=2, max_value=16),
+       n_steps=st.integers(min_value=2, max_value=96))
+def test_every_scenario_builds_valid_colocation(seed, n_mules, n_steps):
+    for name in list_scenarios():
+        spec = SCENARIOS[name]
+        co = spec.colocation(seed, n_mules, n_steps)
+        _check_colocation(name, spec, co, n_mules, n_steps)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       n_mules=st.integers(min_value=2, max_value=12),
+       n_steps=st.integers(min_value=8, max_value=64))
+def test_every_scenario_is_deterministic_per_seed(seed, n_mules, n_steps):
+    for name in list_scenarios():
+        a = SCENARIOS[name].colocation(seed, n_mules, n_steps)
+        b = SCENARIOS[name].colocation(seed, n_mules, n_steps)
+        assert sorted(a) == sorted(b), f"{name}: key set varies"
+        for k in a:
+            assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), \
+                f"{name}: {k} differs across same-seed builds"
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       n_mules=st.integers(min_value=1, max_value=12),
+       n_steps=st.integers(min_value=1, max_value=80))
+def test_mask_generators_shapes_and_liveness(seed, n_mules, n_steps):
+    """The raw generators honour the registry's mask contract directly."""
+    for gen in (markov_churn_mask, flash_churn_mask, duty_cycle_mask):
+        m = gen(seed, n_steps, n_mules)
+        assert m.shape == (n_steps, n_mules)
+        assert m.dtype == bool
+        assert m.any(axis=1).all(), f"{gen.__name__}: dead step"
+        assert np.array_equal(m, gen(seed, n_steps, n_mules)), \
+            f"{gen.__name__}: nondeterministic"
+
+
+def test_churn_scenarios_actually_churn():
+    """The new scenarios must exercise both directions of churn."""
+    for name in ("commuter_churn", "event_crowd_flash"):
+        act = np.asarray(SCENARIOS[name].colocation(0, 12, 200)["active"])
+        assert act.any() and not act.all(), f"{name}: degenerate mask"
+        flips = act[1:] != act[:-1]
+        assert (act[1:] & ~act[:-1]).any(), f"{name}: nobody ever joins"
+        assert (~act[1:] & act[:-1]).any(), f"{name}: nobody ever leaves"
+        assert flips.any(axis=0).sum() >= act.shape[1] // 2, \
+            f"{name}: churn touches too few mules"
+
+
+def test_mixed_cadence_follows_space_specs():
+    """Per-space exchange tempo: a dwell of d steps in space f completes
+    exchanges exactly every spaces[f].exchange_steps steps."""
+    spec = SCENARIOS["mixed_cadence"]
+    cadence = np.array([sp.exchange_steps for sp in spec.spaces])
+    co = spec.colocation(3, 10, 240)
+    fid, exch = np.asarray(co["fixed_id"]), np.asarray(co["exchange"])
+    dwell = np.zeros(10, np.int64)
+    prev = -np.ones(10, np.int32)
+    for t in range(fid.shape[0]):
+        same = (fid[t] == prev) & (fid[t] >= 0)
+        dwell = np.where(same, dwell + 1, np.where(fid[t] >= 0, 1, 0))
+        want = (dwell > 0) & (dwell % cadence[np.clip(fid[t], 0, None)] == 0)
+        np.testing.assert_array_equal(exch[t], want, f"step {t}")
+        prev = fid[t]
+    # heterogeneity is real: at least two different cadences fire
+    fired = np.unique(cadence[fid[exch]])
+    assert len(fired) >= 2, "only one exchange tempo ever exercised"
+
+
+def test_multi_area_scenario_spans_three_areas():
+    spec = SCENARIOS["multi_area_3city"]
+    co = spec.colocation(0, 24, 400)
+    fid = np.asarray(co["fixed_id"])
+    areas = np.unique(fid[fid >= 0] // 4)
+    assert set(areas.tolist()) == {0, 1, 2}, f"visited areas: {areas}"
+    assert np.asarray(co["init_area"]).max() <= 2
+
+
+def test_get_scenario_error_lists_available():
+    """The lookup error must name every registered scenario (the old
+    message was a bare unknown-name KeyError)."""
+    with pytest.raises(ValueError) as exc:
+        get_scenario("definitely_not_a_scenario")
+    msg = str(exc.value)
+    assert "definitely_not_a_scenario" in msg
+    for name in list_scenarios():
+        assert name in msg, f"error message omits {name!r}"
+
+
+def test_registered_scenario_roundtrips():
+    for name in list_scenarios():
+        assert get_scenario(name).name == name

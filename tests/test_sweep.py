@@ -171,3 +171,142 @@ def test_jit_cache_no_retrace_on_repeat_call():
                    method="mlmule")
     s3 = jit_cache_stats()
     assert s3["traces"] == 2 and s3["misses"] == 2
+
+
+# ---------------------------------------------------------------------------
+# population churn: activity masks through every engine path
+# ---------------------------------------------------------------------------
+
+
+def _churned_setup(mode="mobile", seed=0):
+    from repro.mobility import markov_churn_mask
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup(mode, seed=seed)
+    co = dict(co)
+    co["active"] = markov_churn_mask(900 + seed, T, M,
+                                     p_leave=0.2, p_join=0.3)
+    assert co["active"].any() and not co["active"].all()
+    return pop, co, batch_fn, train_fn, pcfg
+
+
+@pytest.mark.parametrize("method", METHODS_MOBILE)
+def test_churn_scan_matches_loop(method):
+    """Masked scan == masked per-step loop, bitwise, for every method."""
+    pop, co, batch_fn, train_fn, pcfg = _churned_setup("mobile")
+    key = jax.random.PRNGKey(23)
+    final, aux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                                method=method)
+    ref, ref_last = run_population_loop(pop, co, batch_fn, train_fn, pcfg,
+                                        key, method=method)
+    _assert_trees_bitwise(final, ref)
+    np.testing.assert_array_equal(np.asarray(aux["last_fid"]),
+                                  np.asarray(ref_last))
+
+
+@pytest.mark.parametrize("method", METHODS_MOBILE)
+def test_all_ones_mask_matches_dense_run(method):
+    """An explicit all-ones mask is bitwise-identical to no mask at all —
+    churn support cannot perturb the dense path."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    key = jax.random.PRNGKey(29)
+    dense, daux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                                 method=method)
+    co_ones = dict(co)
+    co_ones["active"] = np.ones_like(np.asarray(co["fixed_id"]), bool)
+    masked, maux = run_population(pop, co_ones, batch_fn, train_fn, pcfg,
+                                  key, method=method)
+    _assert_trees_bitwise(masked, dense)
+    np.testing.assert_array_equal(np.asarray(maux["last_fid"]),
+                                  np.asarray(daux["last_fid"]))
+    # ... and the masked loop reference agrees with the dense loop too
+    lref, _ = run_population_loop(pop, co_ones, batch_fn, train_fn, pcfg,
+                                  key, method=method)
+    dref, _ = run_population_loop(pop, co, batch_fn, train_fn, pcfg, key,
+                                  method=method)
+    _assert_trees_bitwise(lref, dref)
+
+
+def test_churn_actually_gates_training():
+    """A mule inactive for the whole run keeps its initial model; dense
+    and churned runs of the same schedule diverge."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    co = dict(co)
+    act = np.ones((T, M), bool)
+    act[:, 0] = False                       # mule 0 never comes online
+    co["active"] = act
+    key = jax.random.PRNGKey(31)
+    # precondition: ungated, mule 0 WOULD record a nonzero visit — so the
+    # last_fid == 0 checks below can only pass through the activity gate,
+    # not by coinciding with the init sentinel
+    fid = np.asarray(co["fixed_id"])
+    dense_last = np.zeros(M, np.int64)
+    for t in range(T):
+        dense_last = np.where(fid[t] >= 0, fid[t], dense_last)
+    assert dense_last[0] != 0, "schedule no longer distinguishes the gate"
+    for method in ("mlmule", "local", "gossip"):
+        final, aux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                                    method=method)
+        np.testing.assert_array_equal(
+            np.asarray(final["mule_models"]["w"][0]),
+            np.asarray(pop["mule_models"]["w"][0]),
+            f"{method}: inactive mule's model changed")
+        assert int(np.asarray(aux["last_fid"])[0]) == 0, \
+            f"{method}: inactive mule recorded a visit"
+    dense, _ = run_population(pop, co | {"active": np.ones((T, M), bool)},
+                              batch_fn, train_fn, pcfg, key)
+    churned, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key)
+    assert not np.array_equal(np.asarray(dense["mule_models"]["w"]),
+                              np.asarray(churned["mule_models"]["w"]))
+
+
+def test_churn_sweep_matches_sequential_bitwise():
+    """Per-seed churn masks vmap with the rest of the colocation stack."""
+    seeds = [0, 1, 2]
+    setups = [_churned_setup("mobile", seed=s) for s in seeds]
+    _, _, batch_fn, train_fn, pcfg = setups[0]
+    keys = [jax.random.PRNGKey(300 + s) for s in seeds]
+    finals = [run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                             method="oppcl")[0]
+              for (pop, co, _, _, _), key in zip(setups, keys)]
+    states = stack_trees([s[0] for s in setups])
+    cos = stack_colocations([s[1] for s in setups])
+    assert "active" in cos and cos["active"].shape == (3, T, M)
+    vf, _ = run_sweep(states, cos, batch_fn, train_fn, pcfg,
+                      stack_trees(keys), methods="oppcl")
+    for i in range(len(seeds)):
+        _assert_trees_bitwise(jax.tree.map(lambda l: l[i], vf), finals[i])
+
+
+def test_jit_cache_churn_regression():
+    """Masks are data: repeat same-shape churn runs perform ZERO retraces
+    (dense and churned runs share one compiled replay); a changed mask
+    shape is a cache miss — a new entry, never a retrace of an existing
+    one."""
+    from repro.mobility import duty_cycle_mask, markov_churn_mask
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    key = jax.random.PRNGKey(1)
+    jit_cache_clear()
+    run_population(pop, co, batch_fn, train_fn, pcfg, key)    # dense trace
+    assert jit_cache_stats()["traces"] == 1
+    co_a = dict(co, active=markov_churn_mask(1, T, M))
+    co_b = dict(co, active=duty_cycle_mask(2, T, M, period=6))
+    run_population(pop, co_a, batch_fn, train_fn, pcfg, key)
+    run_population(pop, co_b, batch_fn, train_fn, pcfg,
+                   jax.random.PRNGKey(2))
+    s = jit_cache_stats()
+    assert s["traces"] == 1, "same-shape churn run retraced"
+    assert s["hits"] == 2 and s["misses"] == 1
+
+    # a different schedule shape (new mask shape included) is a miss ...
+    half = T // 2
+    co_short = {k: (np.asarray(v)[:half]
+                    if np.ndim(v) > 1 and np.shape(v)[0] == T else v)
+                for k, v in co_a.items()}
+    run_population(pop, co_short, batch_fn, train_fn, pcfg, key)
+    s = jit_cache_stats()
+    assert s["traces"] == 2 and s["misses"] == 2
+    # ... that coexists with the old entry: both shapes now hit
+    run_population(pop, co_a, batch_fn, train_fn, pcfg, key)
+    run_population(pop, co_short, batch_fn, train_fn, pcfg, key)
+    s = jit_cache_stats()
+    assert s["traces"] == 2, "an existing entry was retraced"
+    assert s["hits"] == 4

@@ -80,3 +80,27 @@ def test_registry_colocation_contract(name):
     assert (co["init_space"] >= 0).all() and (co["init_space"] < 4).all()
     assert (co["exchange"] & (co["fixed_id"] >= 0)).any(), \
         f"scenario {name} never completes an exchange"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n_visits=st.integers(0, 60))
+def test_vectorized_matches_loop_per_place_cadence(seed, n_visits):
+    """Heterogeneous exchange tempos: a per-place exchange_steps array
+    expands identically in the vectorized and loop implementations."""
+    m, t = 6, 80
+    rng = np.random.default_rng(seed)
+    cadence = rng.integers(1, 9, 4)
+    u = rng.integers(0, m, n_visits)
+    place = rng.integers(0, 4, n_visits)
+    t_in = rng.integers(0, t, n_visits)
+    t_out = t_in + rng.integers(1, 25, n_visits)
+    visits = np.stack([u, place, t_in, np.minimum(t_out, t)], axis=1)
+    visits = visits[np.argsort(visits[:, 2], kind="stable")]
+    fid_v, ex_v = trace_to_colocation(visits, m, t, exchange_steps=cadence)
+    fid_l, ex_l = trace_to_colocation_loop(visits, m, t,
+                                           exchange_steps=cadence)
+    np.testing.assert_array_equal(fid_v, fid_l)
+    np.testing.assert_array_equal(ex_v, ex_l)
+    # each exchange fires on its own space's cadence
+    tt, mm = np.nonzero(ex_v)
+    assert (fid_v[tt, mm] >= 0).all()
