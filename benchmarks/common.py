@@ -65,6 +65,8 @@ class ExperimentConfig:
     gamma: float = 0.3
     scenario: str = ""             # registry scenario name; overrides
                                    # mode/dist/task/pattern when set
+    distributed: bool = False      # replay on the mule-sharded engine over
+                                   # the available devices (all methods)
 
 
 # ---------------------------------------------------------------------------
@@ -244,6 +246,24 @@ def _mobility_tensors(cfg: ExperimentConfig):
 # ---------------------------------------------------------------------------
 
 
+def _mule_mesh(n_mules: int):
+    """(1, k) pod x data mesh over the largest divisor of n_mules that the
+    device pool covers — the forced-host-device lane of ``--distributed``.
+
+    Prints the mesh it settled on: the population must divide the data
+    axis, so a prime ``n_mules`` (or a single-accelerator host, where the
+    host-device forcing doesn't apply) degrades to k=1 — still the
+    distributed code path, but with nothing actually sharded.
+    """
+    n_dev = jax.device_count()
+    k = max(s for s in range(1, min(n_dev, n_mules) + 1) if n_mules % s == 0)
+    print(f"distributed mesh: 1 pod x {k} mule shards "
+          f"({n_dev} devices visible, n_mules={n_mules})"
+          + (" — WARNING: k=1 shards nothing" if k == 1 else ""))
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:k]).reshape(1, k), ("pod", "data"))
+
+
 def run_experiment(cfg: ExperimentConfig) -> Dict:
     t_start = time.time()
     if cfg.scenario:
@@ -358,12 +378,31 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
         # is one compiled program. The input population is not read again,
         # so its buffers are donated and the replay updates in place.
         key, ke = jax.random.split(key)
-        pop, aux = run_population(pop, colocation, batch_fn, train_fn,
-                                  pcfg, ke, eval_every=cfg.eval_every,
-                                  eval_fn=eval_hook, method=cfg.method,
-                                  donate=True)
-        traces = [(int(s), float(np.mean(a))) for s, a in
-                  zip(aux["eval_steps"], np.asarray(aux["evals"]))]
+        if cfg.distributed:
+            # mule-sharded replay: every method lowers through the one
+            # MethodProgram table (the peer baselines ring their encounter
+            # search around the mesh). In mobile mode the in-scan eval hook
+            # would read sharded mule models shard-locally, so evaluation
+            # happens once on the gathered final state instead.
+            from repro.core.distributed import (DistributedConfig,
+                                                to_distributed_state)
+            from repro.scenarios import run_population_distributed
+            dcfg = DistributedConfig(pop=pcfg)
+            mesh = _mule_mesh(cfg.n_mules)
+            pop, aux = run_population_distributed(
+                to_distributed_state(pop, dcfg), colocation, batch_fn,
+                train_fn, dcfg, mesh, ke,
+                eval_every=cfg.eval_every if cfg.mode == "fixed" else None,
+                eval_fn=eval_hook if cfg.mode == "fixed" else None,
+                method=cfg.method, donate=True)
+        else:
+            pop, aux = run_population(pop, colocation, batch_fn, train_fn,
+                                      pcfg, ke, eval_every=cfg.eval_every,
+                                      eval_fn=eval_hook, method=cfg.method,
+                                      donate=True)
+        traces = ([] if aux["evals"] is None else
+                  [(int(s), float(np.mean(a))) for s, a in
+                   zip(aux["eval_steps"], np.asarray(aux["evals"]))])
         last_fid = aux["last_fid"]
         final_models = (pop["fixed_models"] if cfg.mode == "fixed"
                         else pop["mule_models"])

@@ -30,6 +30,12 @@ re-execs itself in a subprocess with
 shape: same compiled program (the mask is data — zero retraces), warm
 overhead pinned <= 10% and tracked in ``BENCH_churn.json``.
 
+``run_encounter_bench()`` — the peer-encounter mix: tiled
+``encounter_mix`` kernel vs the retired dense path ([M, M] encounter
+matrix + per-leaf ``masked_group_mean``; the tiled warm step must win),
+plus ring-sharded vs single-host warm gossip replays on the forced
+host-device mesh. Results land in ``BENCH_encounter.json``.
+
 ``run_donation_bench()`` — compile-time memory deltas of donating the
 state pytree to the cached replay (``run_population(..., donate=True)``):
 XLA aliases the state buffers into the outputs, so steady-state peak drops
@@ -67,6 +73,8 @@ _DEFAULT_DIST_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                  "BENCH_distributed.json")
 _DEFAULT_CHURN_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   "BENCH_churn.json")
+_DEFAULT_ENC_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_encounter.json")
 
 
 def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4, seed=0):
@@ -297,8 +305,10 @@ def run_churn_bench(steps: int = 500, n_mules: int = 20, reps: int = 5,
     return rows
 
 
-def _respawn_with_devices(n_devices: int, out_path: str) -> None:
-    """Re-exec the distributed bench in a child with N forced host devices."""
+def _respawn_with_devices(n_devices: int, out_path: str,
+                          flag: str = "--distributed",
+                          out_flag: str = "--out-distributed") -> None:
+    """Re-exec a device-hungry bench in a child with N forced host devices."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
@@ -308,8 +318,169 @@ def _respawn_with_devices(n_devices: int, out_path: str) -> None:
                          env.get("PYTHONPATH", "")).rstrip(os.pathsep)
     env["_REPRO_DIST_BENCH_CHILD"] = "1"   # forbid a second respawn
     subprocess.run([sys.executable, "-m", "benchmarks.engine_micro",
-                    "--distributed", "--out-distributed", out_path],
+                    flag, out_flag, out_path],
                    env=env, cwd=root, check=True)
+
+
+def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
+                        n_devices: int = 8, ring_mules: int = 64,
+                        ring_steps: int = 90,
+                        out_path: str = _DEFAULT_ENC_OUT):
+    """Peer-encounter mix: tiled kernel vs the retired dense path, plus a
+    ring-sharded vs single-host warm gossip replay.
+
+    The dense path builds the full [M, M] encounter matrix, normalizes it,
+    and runs one ``masked_group_mean`` matmul *per model leaf* — O(M^2)
+    reads per leaf on top of the O(M^2 * D) MACs. The fused op
+    (``repro.kernels.encounter_mix``) flattens the model pytree once and
+    computes distance test + row-normalized mix tile by tile, so the
+    [M, M] matrix and the per-leaf passes never exist. Asserts the fused
+    warm step beats the dense warm step and records both in
+    ``BENCH_encounter.json``.
+
+    The ring rows replay the same gossip workload single-host vs sharded
+    over a (2, n/2) mesh (``ppermute`` neighbor streaming); on forced host
+    devices the ring's rendezvous cost usually outweighs the sharding win
+    — the row tracks the overhead honestly, it is not asserted. Needs
+    ``n_devices``; without them the bench re-execs itself like
+    ``run_distributed_bench``.
+    """
+    import numpy as np
+    from repro.baselines.gossip import (encounter_matrix,
+                                        flatten_population,
+                                        unflatten_population)
+    from repro.core.aggregation import masked_group_mean
+    from repro.core.distributed import (DistributedConfig,
+                                        to_distributed_state)
+    from repro.kernels.encounter_mix import encounter_mix
+
+    out_path = os.path.abspath(out_path)
+    if jax.device_count() < n_devices:
+        if os.environ.get("_REPRO_DIST_BENCH_CHILD"):
+            raise RuntimeError(
+                f"need >= {n_devices} devices but forcing host devices "
+                f"yielded {jax.device_count()} on backend "
+                f"{jax.default_backend()!r}")
+        _respawn_with_devices(n_devices, out_path, flag="--encounter",
+                              out_flag="--out-encounter")
+        with open(out_path) as f:
+            payload = json.load(f)
+        return [(k, v, "from respawned child") for k, v in payload.items()
+                if isinstance(v, (int, float))]
+
+    # -- tiled kernel vs dense [M, M] + per-leaf group mean ------------------
+    # the paper's mobile regime at ROADMAP scale: a large population of
+    # tiny on-device models (M >> D), a pytree of many small leaves —
+    # exactly where the retired path pays one [M, M] normalization read
+    # per leaf and the [M, M] matrix itself dominates the traffic
+    m = n_mules
+    leaf_shapes = ([(8,)] * 4 + [(16,)] * 4 + [(4, 4)] * 4
+                   + [(6, 16)] * 2 + [(16, 4)] * 2)      # 16 leaves, D=480
+    models = {f"l{i}": jax.random.normal(jax.random.PRNGKey(i), (m,) + s)
+              for i, s in enumerate(leaf_shapes)}
+    d_total = sum(int(np.prod(l.shape[1:]))
+                  for l in jax.tree.leaves(models))
+    ks = jax.random.split(jax.random.PRNGKey(99), 3)
+    pos = jax.random.uniform(ks[0], (m, 2))
+    area = jax.random.randint(ks[1], (m,), 0, 2)
+    active = jax.random.uniform(ks[2], (m,)) < 0.9
+    radius = 0.1
+
+    @jax.jit
+    def dense_mix(models, pos, area, active):
+        enc = encounter_matrix(pos, area, radius, active).astype(jnp.float32)
+        return masked_group_mean(models, enc)
+
+    @jax.jit
+    def fused_mix(models, pos, area, active):
+        flat, spec = flatten_population(models)
+        mixed, mass = encounter_mix(pos, area, active, flat, radius=radius,
+                                    backend="pallas", block_m=512)
+        return unflatten_population(mixed, spec), mass
+
+    def timed(fn):
+        _block(fn(models, pos, area, active)[0])       # compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            _block(fn(models, pos, area, active)[0])
+            ts.append(time.perf_counter() - t0)
+        return sorted(ts)[reps // 2]
+
+    dense_s = timed(dense_mix)
+    fused_s = timed(fused_mix)
+    assert fused_s < dense_s, \
+        f"tiled encounter_mix ({fused_s:.3f}s) lost to the dense path " \
+        f"({dense_s:.3f}s)"
+
+    # -- ring-sharded vs single-host warm gossip replay ----------------------
+    mesh = jax.make_mesh((2, n_devices // 2), ("pod", "data"))
+    rm, rt = ring_mules, ring_steps
+    X = jax.random.normal(jax.random.PRNGKey(50), (rm, 12, 8))
+    Y = jax.random.normal(jax.random.PRNGKey(60), (rm, 12))
+
+    def train_fn(params, batch, key):
+        xb, yb = batch
+        g = jax.grad(lambda p: jnp.mean((xb @ p["w"] - yb) ** 2))(params)
+        return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+
+    def batch_fn(key, t):
+        idx = jax.random.randint(key, (rm, 4), 0, X.shape[1])
+        return {"fixed": None,
+                "mule": (jnp.take_along_axis(X, idx[:, :, None], 1),
+                         jnp.take_along_axis(Y, idx, 1))}
+
+    pcfg = PopulationConfig(mode="mobile", n_fixed=8, n_mules=rm)
+    pop = init_population(jax.random.PRNGKey(1),
+                          lambda k: {"w": jax.random.normal(k, (8,))}, pcfg)
+    co = walk_colocation(0, rm, rt)
+    key = jax.random.PRNGKey(7)
+
+    def warm(fn):
+        _block(fn()[0])
+        t0 = time.perf_counter()
+        _block(fn()[0])
+        return time.perf_counter() - t0
+
+    host_s = warm(lambda: run_population(pop, co, batch_fn, train_fn, pcfg,
+                                         key, method="gossip"))
+    dcfg = DistributedConfig(pop=pcfg)
+    dstate = to_distributed_state(pop, dcfg)
+    ring_s = warm(lambda: run_population_distributed(
+        dstate, co, batch_fn, train_fn, dcfg, mesh, key, method="gossip"))
+
+    rows = [
+        (f"encounter.dense_warm.M{m}", dense_s, "s (median)"),
+        (f"encounter.tiled_warm.M{m}", fused_s, "s (median)"),
+        (f"encounter.speedup.M{m}", dense_s / fused_s, "x (dense/tiled)"),
+        (f"encounter.host_gossip_warm.M{rm}.T{rt}", host_s, "s total"),
+        (f"encounter.ring_gossip_warm.M{rm}.T{rt}", ring_s, "s total"),
+        (f"encounter.ring_vs_host.M{rm}.T{rt}", host_s / ring_s,
+         "x (host/ring)"),
+    ]
+    for name, val, derived in rows:
+        print(f"{name},{val:.4f},{derived}")
+
+    payload = {
+        "bench": "engine_micro.run_encounter_bench",
+        "config": {"n_mules": m, "d_total": int(d_total),
+                   "n_leaves": len(jax.tree.leaves(models)),
+                   "radius": radius, "reps": reps,
+                   "ring_mules": rm, "ring_steps": rt,
+                   "mesh": dict(mesh.shape),
+                   "backend": jax.default_backend()},
+        "dense_warm_s": round(dense_s, 4),
+        "tiled_warm_s": round(fused_s, 4),
+        "speedup_tiled_vs_dense": round(dense_s / fused_s, 2),
+        "host_gossip_warm_s": round(host_s, 4),
+        "ring_gossip_warm_s": round(ring_s, 4),
+        "ring_vs_host": round(host_s / ring_s, 2),
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return rows
 
 
 def run_distributed_bench(n_devices: int = 8, n_mules: int = 64,
@@ -456,9 +627,12 @@ if __name__ == "__main__":
                     help="run only the distributed benchmark")
     ap.add_argument("--churn", action="store_true",
                     help="run only the churn-mask overhead benchmark")
+    ap.add_argument("--encounter", action="store_true",
+                    help="run only the encounter-mix benchmark")
     ap.add_argument("--out", default=_DEFAULT_OUT)
     ap.add_argument("--out-distributed", default=_DEFAULT_DIST_OUT)
     ap.add_argument("--out-churn", default=_DEFAULT_CHURN_OUT)
+    ap.add_argument("--out-encounter", default=_DEFAULT_ENC_OUT)
     args = ap.parse_args()
     if args.distributed:
         run_distributed_bench(out_path=args.out_distributed)
@@ -466,9 +640,12 @@ if __name__ == "__main__":
         run_sweep_bench(out_path=args.out)
     elif args.churn:
         run_churn_bench(out_path=args.out_churn)
+    elif args.encounter:
+        run_encounter_bench(out_path=args.out_encounter)
     else:
         run()
         run_donation_bench()
         run_sweep_bench(out_path=args.out)
         run_churn_bench(out_path=args.out_churn)
+        run_encounter_bench(out_path=args.out_encounter)
         run_distributed_bench(out_path=args.out_distributed)

@@ -3,6 +3,8 @@
   PYTHONPATH=src python examples/run_scenario.py --scenario commuter
   PYTHONPATH=src python examples/run_scenario.py --scenario commuter \
       --method gossip --seeds 4          # seed-averaged, one vmapped program
+  PYTHONPATH=src python examples/run_scenario.py --scenario commuter \
+      --method oppcl --distributed       # mule-sharded over host devices
   PYTHONPATH=src python examples/run_scenario.py --list
 
 The scenario supplies mobility, protocol mode, data partition — and, for
@@ -10,11 +12,14 @@ the churn family, a per-step device activity mask the engine threads
 through every path: ``commuter_churn`` (Markov join/leave sessions),
 ``event_crowd_flash`` (flash joins, mass exits), ``multi_area_3city``
 (3 near-isolated cities, 12 spaces), ``mixed_cadence`` (per-space
-exchange tempos). The harness supplies the model, pretraining, and the
-compiled scan engine. Every mobile method
-(mlmule/gossip/oppcl/local/mlmule+gossip) rides the engine; with
-``--seeds N > 1`` the replay batches all seeds into one vmapped compiled
-program (``run_sweep_experiment``).
+exchange tempos); the ``har_*`` variants bind the LSTM-CNN IMU task. The
+harness supplies the model, pretraining, and the compiled scan engine.
+Every mobile method (mlmule/gossip/oppcl/local/mlmule+gossip) rides the
+engine; with ``--seeds N > 1`` the replay batches all seeds into one
+vmapped compiled program (``run_sweep_experiment``); with ``--distributed``
+it shards the mule population over a forced host-device mesh instead
+(``run_population_distributed`` — one shard_map'd scan, the peer-encounter
+baselines ring their neighbor search across shards).
 """
 import argparse
 import os
@@ -23,6 +28,14 @@ import sys
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)                       # for `benchmarks`
 sys.path.insert(0, os.path.join(_ROOT, "src"))  # for `repro`
+
+# the host-device mesh must be forced before jax initializes, so peek at
+# argv ahead of the real argparse run (which needs jax-importing modules)
+if "--distributed" in sys.argv and \
+        "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
 
 from benchmarks.common import (METHODS_MOBILE, ExperimentConfig,
                                run_experiment, run_sweep_experiment)
@@ -37,13 +50,25 @@ def main():
                          "(commuter_churn, event_crowd_flash) replay with "
                          "device join/leave masks, multi_area_3city spans "
                          "3 cities, mixed_cadence varies per-space "
-                         "exchange tempo (see --list)")
+                         "exchange tempo, har_* bind the LSTM-CNN IMU task "
+                         "(see --list)")
     ap.add_argument("--method", default="mlmule", choices=METHODS_MOBILE)
     ap.add_argument("--steps", type=int, default=240)
     ap.add_argument("--n-mules", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--seeds", type=int, default=1,
                     help="sweep seed..seed+N-1 as one vmapped program")
+    ap.add_argument("--distributed", action="store_true",
+                    help="shard the mule population over the available "
+                         "devices (on CPU hosts, 8 forced host devices; "
+                         "the run prints the mesh it settles on — "
+                         "n-mules must divide the shard count) and "
+                         "replay on the distributed scan engine — every "
+                         "method (mlmule, gossip, oppcl, local, "
+                         "mlmule+gossip) now shards; mobile-mode runs "
+                         "report final accuracy only (in-scan eval reads "
+                         "sharded state). Mutually exclusive with "
+                         "--seeds > 1.")
     ap.add_argument("--list", action="store_true",
                     help="print the registry and exit")
     args = ap.parse_args()
@@ -53,12 +78,16 @@ def main():
             print(f"{name:18s} {SCENARIOS[name].description}")
         return
 
+    if args.distributed and args.seeds > 1:
+        ap.error("--distributed runs one seed; drop --seeds")
+
     spec = SCENARIOS[args.scenario]
     print(f"scenario={spec.name} mode={spec.mode} dist={spec.dist} "
-          f"task={spec.task} method={args.method}")
+          f"task={spec.task} method={args.method}"
+          + (" [distributed]" if args.distributed else ""))
     cfg = ExperimentConfig(scenario=args.scenario, method=args.method,
                            steps=args.steps, n_mules=args.n_mules,
-                           seed=args.seed)
+                           seed=args.seed, distributed=args.distributed)
 
     if args.seeds > 1:
         seeds = range(args.seed, args.seed + args.seeds)

@@ -3,24 +3,81 @@
 Per encounter: exchange-aggregate-train. Mobile devices within
 ``radius`` of each other in the same area exchange models, average with all
 neighbors (masked row-normalized mixing), then train one local step.
+
+The neighbor average is the fused ``encounter_mix`` op
+(``repro.kernels.encounter_mix``): models flatten once to an [M, D] matrix
+and one pass computes the distance-tested, row-normalized mix — the former
+dense path (``encounter_matrix`` + per-leaf ``masked_group_mean``) survives
+below only as the benchmark baseline it was replaced by.
+
+Sharded populations: with a ``RingSpec`` the step runs inside ``shard_map``
+over the mesh mule axis. Each shard holds a block of the population; the
+blocks of (pos, area, active, flattened models) stream around the ring by
+``ppermute``, one ``encounter_block`` partial accumulated per hop, and the
+row normalization happens once at the end — so no shard ever sees the full
+[M, M] matrix either. A 1-shard ring is exactly the single-host *ref* call,
+so the distributed engine is bitwise-equal to single host on a 1-device
+mesh under the default ``enc_backend="ref"`` (the ring has no Pallas
+lowering; against a single-host Pallas run, agreement is to the kernel's
+pinned tolerance).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.aggregation import batched_mix, masked_group_mean
+from repro.kernels.encounter_mix import (encounter_block, encounter_mix,
+                                         normalize_mix)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSpec:
+    """Mesh ring for cross-shard encounter search.
+
+    ``axis_name`` is the shard_map mule axis; ``axis_size`` its static size
+    (the ring unrolls one ``ppermute`` hop per shard).
+    """
+    axis_name: str
+    axis_size: int
+
+    def perm(self) -> List[Tuple[int, int]]:
+        return [(s, (s + 1) % self.axis_size) for s in range(self.axis_size)]
+
+
+def flatten_population(models: Any) -> Tuple[jnp.ndarray, Any]:
+    """Stacked pytree [M, ...] -> (f32 [M, D] matrix, unflatten spec)."""
+    leaves, treedef = jax.tree.flatten(models)
+    m = leaves[0].shape[0]
+    shapes = [l.shape[1:] for l in leaves]
+    flat = jnp.concatenate(
+        [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+    return flat, (treedef, shapes, [l.dtype for l in leaves])
+
+
+def unflatten_population(flat: jnp.ndarray, spec: Any) -> Any:
+    treedef, shapes, dtypes = spec
+    outs, off = [], 0
+    for s, dt in zip(shapes, dtypes):
+        n = int(np.prod(s)) if s else 1
+        outs.append(flat[:, off:off + n]
+                    .reshape((flat.shape[0],) + s).astype(dt))
+        off += n
+    return jax.tree.unflatten(treedef, outs)
 
 
 def encounter_matrix(pos: jnp.ndarray, area: jnp.ndarray, radius: float,
                      active: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """pos [M,2], area [M] -> symmetric bool [M,M] (no self).
 
-    ``active`` ([M] bool, optional) drops switched-off mules from both
-    sides of every encounter — a sleeping device neither initiates nor
-    serves as a peer.
+    The retired dense path (kept as the ``run_encounter_bench`` baseline
+    and for O(M^2)-tolerant callers). ``active`` ([M] bool, optional) drops
+    switched-off mules from both sides of every encounter — a sleeping
+    device neither initiates nor serves as a peer.
     """
     d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
     same_area = area[:, None] == area[None, :]
@@ -30,16 +87,83 @@ def encounter_matrix(pos: jnp.ndarray, area: jnp.ndarray, radius: float,
     return enc & ~jnp.eye(pos.shape[0], dtype=bool)
 
 
+def ring_encounter_mix(pos: jnp.ndarray, area: jnp.ndarray,
+                       active: Optional[jnp.ndarray], flat: jnp.ndarray, *,
+                       radius: float, ring: RingSpec):
+    """Blockwise ``encounter_mix`` across the mesh ring (inside shard_map).
+
+    All arguments are this shard's block ([m_loc, ...]). One hop per shard:
+    the visiting (pos, area, active, weights) block is matched against the
+    local rows (``encounter_block``), then permuted onward. Returns the
+    local rows' (mix [m_loc, D], mass [m_loc]).
+    """
+    m_loc = flat.shape[0]
+    i = jax.lax.axis_index(ring.axis_name)
+    row0 = i * m_loc
+    act = (jnp.ones((m_loc,), bool) if active is None else active)
+    visiting = (pos, area, act, flat)
+    acc = jnp.zeros_like(flat, jnp.float32)
+    mass = jnp.zeros((m_loc,), jnp.float32)
+    for s in range(ring.axis_size):
+        col0 = ((i - s) % ring.axis_size) * m_loc
+        pos_v, area_v, act_v, flat_v = visiting
+        p_acc, p_mass = encounter_block(pos, area, act, row0,
+                                        pos_v, area_v, act_v, col0,
+                                        flat_v, radius)
+        acc = acc + p_acc
+        mass = mass + p_mass
+        if s + 1 < ring.axis_size:
+            visiting = jax.tree.map(
+                lambda l: jax.lax.ppermute(l, ring.axis_name, ring.perm()),
+                visiting)
+    return normalize_mix(acc, mass), mass
+
+
 def gossip_step(models: Any, pos: jnp.ndarray, area: jnp.ndarray,
                 batches: Any, train_fn: Callable, key, *,
                 radius: float = 0.15, gamma: float = 0.5,
-                active: Optional[jnp.ndarray] = None) -> Any:
-    enc = encounter_matrix(pos, area, radius,
-                           active).astype(jnp.float32)              # [M, M]
-    neigh_mean, mass = masked_group_mean(models, enc)
+                active: Optional[jnp.ndarray] = None, backend: str = "ref",
+                ring: Optional[RingSpec] = None, keys=None) -> Any:
+    """One gossip exchange-aggregate-train step over the population block.
+
+    ``ring=None`` runs single-host over the full population (``backend``
+    selects ref vs the tiled Pallas kernel); with a ``RingSpec`` the step
+    is the shard-local block of a shard_map'd population and neighbors
+    stream around the mesh ring. ``keys`` overrides the per-device training
+    keys ([M, 2]) — the distributed engine passes the global-split local
+    slice so sharded draws match single host row for row.
+    """
+    flat, spec = flatten_population(models)
+    if ring is None:
+        mixed, mass = encounter_mix(pos, area, active, flat, radius=radius,
+                                    backend=backend)
+    else:
+        mixed, mass = ring_encounter_mix(pos, area, active, flat,
+                                         radius=radius, ring=ring)
+    neigh_mean = unflatten_population(mixed, spec)
     met = (mass > 0).astype(jnp.float32)
     models = batched_mix(models, neigh_mean, gamma * met)           # aggregate
-    n = mass.shape[0]
-    keys = jax.random.split(key, n)
+    if keys is None:
+        keys = jax.random.split(key, mass.shape[0])
     trained = jax.vmap(train_fn)(models, batches, keys)             # train
     return batched_mix(models, trained, met)                        # only on encounter
+
+
+def gossip_step_dense(models: Any, pos: jnp.ndarray, area: jnp.ndarray,
+                      batches: Any, train_fn: Callable, key, *,
+                      radius: float = 0.15, gamma: float = 0.5,
+                      active: Optional[jnp.ndarray] = None) -> Any:
+    """The retired dense gossip step: [M, M] matrix + per-leaf group mean.
+
+    Benchmark baseline only (``benchmarks/engine_micro.run_encounter_bench``
+    times it against the fused path); note it normalizes the encounter
+    matrix *before* the per-leaf matmuls, so it differs from ``gossip_step``
+    in float rounding, not semantics.
+    """
+    enc = encounter_matrix(pos, area, radius, active).astype(jnp.float32)
+    neigh_mean, mass = masked_group_mean(models, enc)
+    met = (mass > 0).astype(jnp.float32)
+    models = batched_mix(models, neigh_mean, gamma * met)
+    keys = jax.random.split(key, mass.shape[0])
+    trained = jax.vmap(train_fn)(models, batches, keys)
+    return batched_mix(models, trained, met)

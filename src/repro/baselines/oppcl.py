@@ -5,6 +5,15 @@ Device i sends its model to an encountered peer j; j trains i's model on
 j's local data and returns it; i aggregates the returned model with its own.
 Vectorized simplification (documented): each device picks its nearest
 neighbor as the peer for the step.
+
+Sharded populations: with a ``RingSpec`` the nearest-neighbor search runs
+blockwise inside ``shard_map`` — each shard's (pos, area, active, batches)
+block streams around the mesh ring, and every local row keeps a running
+lexicographic minimum over ``(distance^2, global peer index)`` plus the
+winning peer's batch. The lexicographic tie-break makes the result
+independent of ring order, so it equals the single-host full-row ``argmin``
+(first occurrence) exactly; since the per-row train/aggregate math is
+shard-local, the sharded step is bitwise-equal to single host on any mesh.
 """
 from __future__ import annotations
 
@@ -13,25 +22,81 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.baselines.gossip import encounter_matrix
+from repro.baselines.gossip import RingSpec
 from repro.core.aggregation import batched_mix
+from repro.kernels.encounter_mix import encounter_gate
+
+
+def _block_d2(pos_r, area_r, act_r, row0, pos_v, area_v, act_v, col0):
+    """Squared distances of local rows vs a visiting block, inf where the
+    pair fails the shared non-distance gates (``encounter_gate``)."""
+    d2, gate = encounter_gate(pos_r, area_r, act_r, row0,
+                              pos_v, area_v, act_v, col0)
+    return jnp.where(gate, d2, jnp.inf)
+
+
+def _ring_nearest_peer(pos, area, active, batches, *, radius: float,
+                       ring: RingSpec):
+    """Cross-shard nearest-encounter search; returns (peer_batches, met)."""
+    m_loc = pos.shape[0]
+    i = jax.lax.axis_index(ring.axis_name)
+    row0 = i * m_loc
+    act = (jnp.ones((m_loc,), bool) if active is None else active)
+    visiting = (pos, area, act, batches)
+    best_d2 = jnp.full((m_loc,), jnp.inf)
+    best_g = jnp.full((m_loc,), jnp.iinfo(jnp.int32).max, jnp.int32)
+    best_b = batches                         # placeholder rows; met gates use
+    for s in range(ring.axis_size):
+        col0 = ((i - s) % ring.axis_size) * m_loc
+        pos_v, area_v, act_v, batch_v = visiting
+        d2 = _block_d2(pos, area, act, row0, pos_v, area_v, act_v, col0)
+        d2 = jnp.where(d2 <= radius ** 2, d2, jnp.inf)
+        j = jnp.argmin(d2, axis=1)                           # [m_loc]
+        cand = jnp.min(d2, axis=1)
+        cand_g = (col0 + j).astype(jnp.int32)
+        better = (cand < best_d2) | ((cand == best_d2) & (cand_g < best_g))
+        best_d2 = jnp.where(better, cand, best_d2)
+        best_g = jnp.where(better, cand_g, best_g)
+        cand_b = jax.tree.map(lambda l: l[j], batch_v)
+        best_b = jax.tree.map(
+            lambda n, o: jnp.where(
+                better.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            cand_b, best_b)
+        if s + 1 < ring.axis_size:
+            visiting = jax.tree.map(
+                lambda l: jax.lax.ppermute(l, ring.axis_name, ring.perm()),
+                visiting)
+    met = jnp.isfinite(best_d2).astype(jnp.float32)
+    return best_b, met
 
 
 def oppcl_step(models: Any, pos: jnp.ndarray, area: jnp.ndarray,
                batches: Any, train_fn: Callable, key, *,
                radius: float = 0.15, gamma: float = 0.5,
-               active: Optional[jnp.ndarray] = None) -> Any:
-    m = pos.shape[0]
-    enc = encounter_matrix(pos, area, radius, active)
-    d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
-    d2 = jnp.where(enc, d2, jnp.inf)
-    peer = jnp.argmin(d2, axis=1)                                  # [M]
-    met = jnp.isfinite(jnp.min(d2, axis=1)).astype(jnp.float32)
+               active: Optional[jnp.ndarray] = None, backend: str = "ref",
+               ring: Optional[RingSpec] = None, keys=None) -> Any:
+    """One OppCL cycle over the population block.
 
-    # peer j trains i's model on j's data (exchange-train)
-    my_model_at_peer = models                                      # i's model ...
-    peer_batches = jax.tree.map(lambda l: l[peer], batches)        # ... j's data
-    keys = jax.random.split(key, m)
-    trained = jax.vmap(train_fn)(my_model_at_peer, peer_batches, keys)
+    ``ring``/``keys`` follow the ``gossip_step`` contract (shard-local
+    block + streamed neighbor search / externally supplied per-row train
+    keys). ``backend`` is accepted for signature uniformity with
+    ``gossip_step``; the peer search is D-free, so there is no kernel to
+    select.
+    """
+    m = pos.shape[0]
+    if ring is None:
+        d2 = _block_d2(pos, area, active, 0, pos, area, active, 0)
+        d2 = jnp.where(d2 <= radius ** 2, d2, jnp.inf)
+        peer = jnp.argmin(d2, axis=1)                              # [M]
+        met = jnp.isfinite(jnp.min(d2, axis=1)).astype(jnp.float32)
+        peer_batches = jax.tree.map(lambda l: l[peer], batches)    # j's data
+    else:
+        peer_batches, met = _ring_nearest_peer(pos, area, active, batches,
+                                               radius=radius, ring=ring)
+
+    # peer j trains i's model on j's data (exchange-train), then
     # (exchange back - aggregate)
+    if keys is None:
+        keys = jax.random.split(key, m)
+    trained = jax.vmap(train_fn)(models, peer_batches, keys)
     return batched_mix(models, trained, gamma * met)

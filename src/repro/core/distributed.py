@@ -12,8 +12,12 @@ Mapping (DESIGN.md Sec 2):
 
 ``make_distributed_method_step`` builds the shard-local one-step update the
 *scan* engine replays: same ``(state, info, batches, key) -> state``
-signature as the single-host ``make_method_step``, with the fused
-segment-reduce + psum collective schedule inside. The whole replay —
+signature as the single-host ``make_method_step``, both thin wrappers over
+the one ``repro.core.method_program`` table. ML Mule's space exchange
+lowers to the fused segment-reduce + psum collective schedule; the
+peer-encounter baselines (gossip/oppcl/mlmule+gossip) lower to a ring
+``ppermute`` exchange that streams population blocks around the mesh mule
+axis — so every ``METHODS_MOBILE`` method shards. The whole replay —
 collectives included — then runs as one ``lax.scan`` under ``shard_map``
 (``repro.scenarios.run_population_distributed``), so an experiment is a
 single XLA program instead of thousands of per-step dispatches.
@@ -51,10 +55,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.freshness import (FreshnessConfig, age_bin_onehot,
-                                  age_histogram, init_freshness_sketch,
-                                  sketch_push_and_update)
-from repro.core.population import PopulationConfig, apply_activity_mask
+from repro.core.freshness import (FreshnessConfig, age_histogram,
+                                  init_freshness_sketch)
+from repro.core.population import PopulationConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,195 +207,47 @@ def to_distributed_state(state: Dict[str, Any],
 
 
 def make_distributed_method_step(method: str, train_fn: Callable,
-                                 dcfg: DistributedConfig) -> Callable:
+                                 dcfg: DistributedConfig,
+                                 mesh: Mesh = None) -> Callable:
     """Shard-local one-step update for the distributed scan engine.
 
-    Same signature as the single-host ``make_method_step`` result —
-    ``step(state, info, batches, key) -> state`` — but every array with a
-    leading mule axis is the *local shard* of the population ([M_loc, ...],
-    M_loc = n_mules / data-axis size) and the aggregation/freshness
-    reductions are ``psum`` collectives, so the step must run inside
-    ``shard_map`` over ``dcfg.data_axis``. ``state`` follows the
-    ``to_distributed_state`` layout: mule_models/mule_ts sharded,
-    fixed_models/fresh/t replicated.
+    Thin wrapper over the one ``repro.core.method_program`` table (the
+    same programs ``make_method_step`` lowers single-host), compiled to the
+    shard_map lowering: same ``step(state, info, batches, key) -> state``
+    signature, but every array with a leading mule axis is the *local
+    shard* of the population ([M_loc, ...], M_loc = n_mules / data-axis
+    size), ``info`` additionally carries the shard-local ``"area"`` block,
+    and the step must run inside ``shard_map`` over ``dcfg.data_axis``.
+    ``state`` follows the ``to_distributed_state`` layout: mule_models /
+    mule_ts sharded, fixed_models/fresh/t replicated.
+
+    All five ``METHODS_MOBILE`` lower: ``mlmule`` runs the fused
+    segment-reduce + single-psum collective schedule; the peer-encounter
+    baselines (gossip / oppcl / the mlmule+gossip hybrid) stream each
+    shard's (pos, area, active, payload) block around the mesh mule axis
+    with a ring ``ppermute`` (``mesh`` is required to size the ring);
+    ``local`` needs no collective at all.
 
     Key discipline mirrors the single-host engine exactly: fixed-mode
-    training splits the replicated key over ``n_fixed``; mobile-mode
-    training splits it over the *global* ``n_mules`` and slices the local
-    block, so the per-mule draws are identical to a single-host run
-    regardless of shard count. Mule batches produced replicated (a batch
-    callable returning full ``[n_mules, ...]`` arrays) are sliced the same
-    way; batches already shard-local (stacked sharded inputs) pass through.
-
-    Methods: ``mlmule`` (the paper's protocol — the collective schedule
-    above) and ``local`` (no communication). The peer-encounter baselines
-    (gossip/oppcl) need position-based neighbor search across the whole
-    population and are single-host only.
+    training splits the replicated key over ``n_fixed``; every per-mule
+    draw splits it over the *global* ``n_mules`` and slices the local
+    block, so per-mule draws are identical to a single-host run regardless
+    of shard count. Mule batches produced replicated (a batch callable
+    returning full ``[n_mules, ...]`` arrays) are sliced the same way;
+    batches already shard-local (stacked sharded inputs) pass through.
 
     Churn: ``info["active"]`` ([M_loc] bool, sharded like ``fixed_id``)
-    masks switched-off mules. For mlmule it ANDs into the delivery mask
-    before the fused reduction, so inactive mules contribute nothing to
-    the single psum payload (models, counts, freshness statistic) and the
-    step is bitwise-equal to the single-host masked step; for mobile-mode
-    local it selects inactive mules' old models back in after the dense
-    train.
+    masks switched-off mules with the single-host semantics — mlmule ANDs
+    it into the delivery mask before the fused reduction, peer exchanges
+    drop inactive mules from both sides of the streamed encounter test,
+    and local/mobile training where-selects old models back in.
     """
-    cfg = dcfg.pop
-    fcfg = cfg.freshness
-    axes = ((dcfg.pod_axis, dcfg.data_axis) if dcfg.pod_axis
-            else (dcfg.data_axis,))
-    reduce_axes = axes if dcfg.cross_pod else (dcfg.data_axis,)
-
-    def local_block(leaf, m_loc):
-        """Slice this shard's mule rows from a replicated [M, ...] array."""
-        if leaf.shape[0] == m_loc:
-            return leaf                       # already shard-local
-        i = jax.lax.axis_index(dcfg.data_axis)
-        return jax.lax.dynamic_slice_in_dim(leaf, i * m_loc, m_loc, axis=0)
-
-    def mule_train_keys(key, m_loc):
-        keys = jax.random.split(key, cfg.n_mules)
-        return local_block(keys, m_loc)
-
-    if method == "local":
-        def step(st, info, batches, key):
-            if cfg.mode == "fixed":
-                keys = jax.random.split(key, cfg.n_fixed)
-                trained = jax.vmap(train_fn)(st["fixed_models"],
-                                             batches["fixed"], keys)
-                return {**st, "fixed_models": trained}
-            m_loc = info["fixed_id"].shape[0]
-            mb = jax.tree.map(lambda l: local_block(l, m_loc),
-                              batches["mule"])
-            keys = mule_train_keys(key, m_loc)
-            trained = jax.vmap(train_fn)(st["mule_models"], mb, keys)
-            trained = apply_activity_mask(info.get("active"), trained,
-                                          st["mule_models"])
-            return {**st, "mule_models": trained}
-        return step
-
-    if method != "mlmule":
-        raise ValueError(
-            f"distributed engine supports 'mlmule' and 'local', got "
-            f"{method!r} (peer-encounter baselines are single-host only)")
-
-    def step(st, info, batches, key):
-        t = st["t"]
-        fid = info["fixed_id"]
-        m_loc = fid.shape[0]
-        deliver = info["exchange"] & (fid >= 0)
-        if info.get("active") is not None:
-            # churn folds into the delivery mask, so inactive mules vanish
-            # from the fused psum payload (model columns, counts, and the
-            # freshness statistic alike) — distributed == single-host
-            # under any mask by construction
-            deliver = deliver & info["active"]
-        ages = t - st["mule_ts"]
-        fresh = st["fresh"]
-        thr = fresh["threshold"][jnp.maximum(fid, 0)]
-        if fcfg.stat == "median":
-            warm = fresh["count"][jnp.maximum(fid, 0)] < fcfg.warmup
-            fresh_ok = deliver & (warm | (ages <= thr))
-        else:
-            # legacy semantics preserved from the retired per-step path:
-            # meanstd carries no receipt counts, so FreshnessConfig.warmup
-            # is ignored — acceptance is the bare threshold test
-            fresh_ok = deliver & (ages <= thr)
-
-        # -- fused segment-reduce + ONE all-reduce ---------------------------
-        # Every per-step reduction — model contributions of all leaves,
-        # receipt counts, and the freshness statistic (age moments or
-        # histogram bins) — is packed into columns of a single [F, ...]
-        # matrix so the whole step costs exactly one psum. On a scan of
-        # thousands of steps the collective rendezvous is the dominant
-        # cost; fusing ~10 all-reduces into 1 is most of the engine's win.
-        onehot = jax.nn.one_hot(jnp.maximum(fid, 0), cfg.n_fixed, axis=0)
-        a_loc = onehot * fresh_ok[None, :].astype(jnp.float32)  # [F, M_loc]
-        leaves, treedef = jax.tree.flatten(st["mule_models"])
-        shapes = [l.shape[1:] for l in leaves]
-        sizes = [int(np.prod(s)) if s else 1 for s in shapes]
-        flat = jnp.concatenate(
-            [l.reshape(m_loc, -1).astype(jnp.float32) for l in leaves]
-            + [jnp.ones((m_loc, 1), jnp.float32)], axis=1)
-        cols_a = [a_loc @ flat]                # models | counts  [F, D+1]
-        if fcfg.stat == "meanstd":
-            cols_a.append(a_loc @ jnp.stack([ages, ages ** 2], axis=1))
-        else:
-            d_loc = onehot * deliver[None, :].astype(jnp.float32)
-            bins = age_bin_onehot(ages, fcfg)                  # [M_loc, B]
-            cols_a.append(d_loc @ jnp.concatenate(
-                [bins, jnp.ones((m_loc, 1), jnp.float32)], axis=1))
-        fused = jax.lax.psum(jnp.concatenate(cols_a, axis=1), reduce_axes)
-
-        d_total = sum(sizes)
-        part_flat = fused[:, :d_total]
-        counts = fused[:, d_total]
-        has = (counts > 0).astype(jnp.float32)
-        norm = part_flat / jnp.maximum(counts, 1.0)[:, None]
-        outs, off = [], 0
-        for s, n, l in zip(shapes, sizes, leaves):
-            outs.append(norm[:, off:off + n]
-                        .reshape((cfg.n_fixed,) + s).astype(l.dtype))
-            off += n
-        agg = jax.tree.unflatten(treedef, outs)
-        gamma = (cfg.gamma / (1.0 + cfg.prox_mu)
-                 if cfg.aggregation == "prox" else cfg.gamma)
-        fixed_models = _tree_mix(st["fixed_models"], agg, gamma * has)
-
-        # -- freshness threshold update --------------------------------------
-        if fcfg.stat == "median":
-            # paper semantics: every *delivered* age is pushed (accepted or
-            # not). Mule shards are replicated across pods, so a cross_pod
-            # reduce folds n_pods copies into the histogram and counts;
-            # quantiles are scale-invariant but warmup counts are not, so
-            # both are divided back down (psum of a literal is the axis
-            # size, folded at compile time — no extra collective).
-            n_rep = (jax.lax.psum(1, dcfg.pod_axis)
-                     if dcfg.pod_axis and dcfg.cross_pod else 1)
-            step_hist = fused[:, d_total + 1:-1] / n_rep
-            step_cnt = fused[:, -1] / n_rep
-            fresh = sketch_push_and_update(fresh, step_hist, step_cnt, fcfg)
-        else:
-            # legacy deviation: EMA of this step's accepted-age mean/std
-            age_sum, age_sq = fused[:, -2], fused[:, -1]
-            mean_age = age_sum / jnp.maximum(counts, 1.0)
-            var_age = jnp.maximum(
-                age_sq / jnp.maximum(counts, 1.0) - mean_age ** 2, 0.0)
-            target = mean_age + fcfg.beta * jnp.sqrt(var_age)
-            fresh = {"threshold": jnp.where(
-                counts > 0,
-                (1 - fcfg.alpha) * fresh["threshold"] + fcfg.alpha * target,
-                fresh["threshold"])}
-
-        # -- training + send-back (paper Fig. 2 cycles) ----------------------
-        if cfg.mode == "fixed":
-            keys = jax.random.split(key, cfg.n_fixed)
-            trained = jax.vmap(train_fn)(fixed_models, batches["fixed"],
-                                         keys)
-            fixed_models = _tree_mix(fixed_models, trained, has)
-
-        per_mule_fixed = jax.tree.map(
-            lambda l: l[jnp.maximum(fid, 0)], fixed_models)
-        gm = cfg.gamma * deliver.astype(jnp.float32)
-        mule_models = _tree_mix(st["mule_models"], per_mule_fixed, gm)
-
-        if cfg.mode == "mobile":
-            mb = jax.tree.map(lambda l: local_block(l, m_loc),
-                              batches["mule"])
-            keys = mule_train_keys(key, m_loc)
-            trained = jax.vmap(train_fn)(mule_models, mb, keys)
-            mule_models = _tree_mix(mule_models, trained,
-                                    deliver.astype(jnp.float32))
-
-        return {
-            "mule_models": mule_models,
-            "fixed_models": fixed_models,
-            "mule_ts": jnp.where(deliver, t, st["mule_ts"]),
-            "fresh": fresh,
-            "t": t + 1.0,
-        }
-
-    return step
+    from repro.core.method_program import (compile_distributed_step,
+                                           get_program)
+    ring_size = (int(mesh.shape[dcfg.data_axis]) if mesh is not None
+                 else None)
+    return compile_distributed_step(get_program(method), train_fn, dcfg,
+                                    ring_size=ring_size)
 
 
 def migrate_mules(mule_models: Any, move_mask: jnp.ndarray, mesh: Mesh,
@@ -401,7 +256,12 @@ def migrate_mules(mule_models: Any, move_mask: jnp.ndarray, mesh: Mesh,
 
     move_mask: [M] bool (sharded over data). A flagged mule's model is sent
     to the same slot on the next pod (ring collective_permute) — the paper's
-    inter-city traveler.
+    inter-city traveler (0.715% of Foursquare check-ins). Applying the swap
+    ``n_pods`` times walks a slot around the whole ring back to its origin,
+    so migrations round-trip bitwise (pinned by ``tests/test_distributed``);
+    this is the building block for the ROADMAP's mid-run area-migration
+    scenario candidate (a ``ChurnSpec``-style declaration that fires
+    ``migrate_mules`` between scan chunks).
     """
     n_pods = mesh.shape[pod_axis]
     perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]

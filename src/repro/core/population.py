@@ -61,6 +61,7 @@ class PopulationConfig:
     gamma: float = 0.5             # aggregation mixing weight
     freshness: FreshnessConfig = FreshnessConfig()
     agg_backend: str = "ref"
+    enc_backend: str = "ref"       # peer-encounter mix: ref | pallas | auto
     aggregation: str = "weighted"  # weighted | prox (FedProx-style damping)
     prox_mu: float = 0.1
 
@@ -171,88 +172,21 @@ def make_method_step(method: str, train_fn: TrainFn, cfg: PopulationConfig,
                      area: jnp.ndarray) -> Callable:
     """Build a traceable one-step update for any ``METHODS_MOBILE`` method.
 
-    The returned function has the uniform signature
-    ``step(state, info, batches, key) -> state`` where ``info`` extends the
-    ``population_step`` contract with ``"pos"`` ([M, 2] mule positions) and
-    ``"t"`` (scalar int32 step index). ``area`` is the per-mule area vector
-    the peer-encounter baselines need (areas are isolated).
-
-    Method semantics (bitwise-pinned by the parity tests against
-    ``run_population_loop``):
-
-    - ``mlmule``        — ``population_step`` every step.
-    - ``local``         — the training side (per ``cfg.mode``) takes one
-                          local step; no communication, other state carried.
-    - ``gossip/oppcl``  — peer exchange costs 3 time steps (paper Sec
-                          4.3.1): the step runs only when ``t % 3 == 2``
-                          (``lax.cond``), otherwise models are carried.
-    - ``mlmule+gossip`` — ``population_step`` every step, plus a gossip
-                          exchange at the same ``t % 3 == 2`` cadence keyed
-                          with ``fold_in(key, 1)``.
-
-    Non-mlmule methods update only their model side; freshness state and
-    the protocol clock are carried unchanged, exactly like the retired
-    per-step harness loop they replace.
-
-    Churn: every method honours ``info["active"]`` ([M] bool, optional) —
-    mlmule folds it into the delivery mask (``population_step``); local
-    trains the whole population densely and selects inactive mules' old
-    models back in (``apply_activity_mask``); gossip/oppcl drop inactive
-    mules from the encounter matrix (they neither initiate nor serve as
-    peers) and carry their models through the exchange bitwise.
+    Thin wrapper: the method's semantics live in the one
+    ``repro.core.method_program.METHOD_PROGRAMS`` table (cadences, key
+    discipline, churn handling — see that module for the contract and the
+    recipe for adding a method), and ``compile_step`` lowers the program to
+    the single-host scan step. The returned function has the uniform
+    signature ``step(state, info, batches, key) -> state`` where ``info``
+    extends the ``population_step`` contract with ``"pos"`` ([M, 2] mule
+    positions) and ``"t"`` (scalar int32 step index); ``area`` is the
+    per-mule area vector the peer-encounter methods need (areas are
+    isolated). Bitwise-pinned by the parity tests against
+    ``run_population_loop``.
     """
-    if method == "mlmule":
-        def step(st, info, batches, key):
-            return population_step(st, info, batches, train_fn, cfg, key)
-        return step
-
-    # deferred: baselines build on repro.core, so a top-level import cycles
-    from repro.baselines import gossip_step, local_step, oppcl_step
-
-    if method == "local":
-        side, bkey = (("fixed_models", "fixed") if cfg.mode == "fixed"
-                      else ("mule_models", "mule"))
-
-        def step(st, info, batches, key):
-            trained = local_step(st[side], batches[bkey], train_fn, key)
-            if side == "mule_models":
-                trained = apply_activity_mask(info.get("active"), trained,
-                                              st[side])
-            return {**st, side: trained}
-        return step
-
-    if method in ("gossip", "oppcl"):
-        peer_step = gossip_step if method == "gossip" else oppcl_step
-
-        def step(st, info, batches, key):
-            act = info.get("active")
-
-            def exchange(models):
-                new = peer_step(models, info["pos"], area, batches["mule"],
-                                train_fn, key, active=act)
-                return apply_activity_mask(act, new, models)
-            models = jax.lax.cond(info["t"] % 3 == 2, exchange, lambda m: m,
-                                  st["mule_models"])
-            return {**st, "mule_models": models}
-        return step
-
-    if method == "mlmule+gossip":
-        def step(st, info, batches, key):
-            st = population_step(st, info, batches, train_fn, cfg, key)
-            kg = jax.random.fold_in(key, 1)
-            act = info.get("active")
-
-            def exchange(models):
-                new = gossip_step(models, info["pos"], area, batches["mule"],
-                                  train_fn, kg, active=act)
-                return apply_activity_mask(act, new, models)
-            models = jax.lax.cond(info["t"] % 3 == 2, exchange, lambda m: m,
-                                  st["mule_models"])
-            return {**st, "mule_models": models}
-        return step
-
-    raise ValueError(f"unknown method {method!r}; "
-                     f"expected one of {METHODS_MOBILE}")
+    # deferred: method_program builds on repro.core + repro.baselines
+    from repro.core.method_program import compile_step, get_program
+    return compile_step(get_program(method), train_fn, cfg, area)
 
 
 # ---------------------------------------------------------------------------

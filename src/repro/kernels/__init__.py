@@ -2,6 +2,11 @@
 
 - ``mule_agg``        — fused dwell-weighted population aggregation (the ML
                         Mule aggregation step at population scale; memory-bound).
+- ``encounter_mix``   — fused peer-encounter neighbor mix (gossip baselines):
+                        one flat matmul instead of per-leaf group means on
+                        every backend; the tiled Pallas path additionally
+                        never materializes the [M, M] encounter matrix
+                        (the jnp oracle, the exact default, still does).
 - ``flash_attention`` — blockwise causal/windowed GQA attention (train/prefill
                         hot spot of the assigned transformer archs).
 - ``ssm_scan``        — chunked Mamba2/SSD selective-state-space scan (zamba2).

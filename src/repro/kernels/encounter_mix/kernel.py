@@ -1,0 +1,97 @@
+"""Fused peer-encounter mix as a tiled Pallas TPU kernel.
+
+The retired dense path built the full [M, M] encounter matrix and ran a
+``masked_group_mean`` over every model leaf — one [M, M] normalization pass
+plus one skinny matmul *per leaf*, O(M^2 * L) memory traffic on top of the
+O(M^2 * D) MACs. Here the [M, M] matrix never exists: the grid walks
+``(row block, d block)`` output tiles; geometry (x, y, area, active — a
+tiny [4, M] strip) stays VMEM-resident across the whole grid, each step
+recomputes the distance/area/activity test for one [block_m, M] strip in
+registers, and a single [block_m, M] x [M, block_d] MXU matmul produces the
+already-normalized mix tile. The per-row neighbor count (``mass``) falls
+out of the same strip and is written once per row block.
+
+Arithmetic intensity per weight element is ~block_m MACs — the same
+streaming roofline shape as ``mule_agg`` — while the dense path's
+per-leaf [M, M] reads disappear entirely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mix_kernel(g_ref, gr_ref, w_ref, o_ref, mass_ref, *, radius: float,
+                block_m: int):
+    i = pl.program_id(0)
+    g = g_ref[...].astype(jnp.float32)          # [4, M]   resident
+    gr = gr_ref[...].astype(jnp.float32)        # [4, block_m] this row block
+    m_tot = g.shape[1]
+
+    dx = gr[0][:, None] - g[0][None, :]         # [block_m, M]
+    dy = gr[1][:, None] - g[1][None, :]
+    d2 = dx * dx + dy * dy
+    enc = (d2 <= radius * radius)
+    enc &= gr[2][:, None] == g[2][None, :]      # area isolation
+    enc &= (gr[3][:, None] > 0) & (g[3][None, :] > 0)   # both active
+    rows = i * block_m + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_m, m_tot), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_m, m_tot), 1)
+    enc &= rows != cols                         # no self-encounter
+    e = enc.astype(jnp.float32)
+    mass = jnp.sum(e, axis=1)                   # [block_m]
+
+    w = w_ref[...].astype(jnp.float32)          # [M, block_d] streamed
+    acc = jax.lax.dot_general(e, w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[...] = (acc / jnp.maximum(mass, 1e-12)[:, None]).astype(o_ref.dtype)
+    mass_ref[...] = mass[None, :].astype(mass_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("radius", "block_m", "block_d",
+                                             "interpret"))
+def encounter_mix_pallas(pos: jnp.ndarray, area: jnp.ndarray,
+                         active: jnp.ndarray, weights: jnp.ndarray, *,
+                         radius: float = 0.15, block_m: int = 256,
+                         block_d: int = 2048, interpret: bool = True):
+    """pos [M, 2], area [M], active [M], weights [M, D] -> (mix [M, D],
+    mass [M]) — the ``encounter_mix_reference`` contract, tiled."""
+    m, d = weights.shape
+    block_m = min(block_m, max(8, m))
+    block_d = min(block_d, max(128, d))
+    nm, nd = -(-m // block_m), -(-d // block_d)
+    m_pad, d_pad = nm * block_m, nd * block_d
+
+    geom = jnp.stack([pos[:, 0].astype(jnp.float32),
+                      pos[:, 1].astype(jnp.float32),
+                      area.astype(jnp.float32),
+                      active.astype(jnp.float32)])            # [4, M]
+    if m_pad != m:
+        # padded lanes carry active=0, so they join no encounter
+        geom = jnp.pad(geom, ((0, 0), (0, m_pad - m)))
+        weights = jnp.pad(weights, ((0, m_pad - m), (0, 0)))
+    if d_pad != d:
+        weights = jnp.pad(weights, ((0, 0), (0, d_pad - d)))
+
+    out, mass = pl.pallas_call(
+        functools.partial(_mix_kernel, radius=radius, block_m=block_m),
+        grid=(nm, nd),
+        in_specs=[
+            pl.BlockSpec((4, m_pad), lambda i, j: (0, 0)),      # resident
+            pl.BlockSpec((4, block_m), lambda i, j: (0, i)),    # row block
+            pl.BlockSpec((m_pad, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_pad, d_pad), weights.dtype),
+            jax.ShapeDtypeStruct((1, m_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(geom, geom, weights)
+    return out[:m, :d], mass[0, :m]

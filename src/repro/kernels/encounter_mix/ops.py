@@ -1,0 +1,50 @@
+"""Dispatching wrapper for the fused peer-encounter mix.
+
+``backend``:
+- ``"ref"``       — the jnp oracle (engine default; exact, CPU-friendly).
+- ``"pallas"``    — the tiled kernel, compiled (TPU) or interpreted per the
+                    same autodetect/env override as ``mule_agg``.
+- ``"interpret"`` — the tiled kernel, interpreter forced.
+- ``"auto"``      — pallas on TPU, ref elsewhere.
+
+``REPRO_PALLAS_INTERPRET`` overrides the interpret autodetect exactly like
+``repro.kernels.mule_agg.ops``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.encounter_mix.kernel import encounter_mix_pallas
+from repro.kernels.encounter_mix.ref import (  # noqa: F401
+    encounter_block, encounter_gate, encounter_mix_reference, normalize_mix)
+from repro.kernels.mule_agg.ops import _env_interpret
+
+
+def encounter_mix(pos: jnp.ndarray, area: jnp.ndarray,
+                  active: Optional[jnp.ndarray], weights: jnp.ndarray, *,
+                  radius: float = 0.15, backend: str = "ref",
+                  block_m: int = 256, block_d: int = 2048,
+                  interpret: bool | None = None):
+    """pos [M, 2] x area [M] x weights [M, D] -> (mix [M, D], mass [M])."""
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return encounter_mix_reference(pos, area, active, weights,
+                                       radius=radius)
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(f"unknown encounter_mix backend {backend!r}; "
+                         "expected ref | pallas | interpret | auto")
+    if interpret is None:
+        interpret = _env_interpret()
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if backend == "interpret":
+        interpret = True
+    if active is None:
+        active = jnp.ones((weights.shape[0],), bool)
+    return encounter_mix_pallas(pos, area, active, weights, radius=radius,
+                                block_m=block_m, block_d=block_d,
+                                interpret=interpret)

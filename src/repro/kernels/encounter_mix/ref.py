@@ -1,0 +1,91 @@
+"""Oracle for the fused encounter-mix kernel — and the one block math.
+
+``encounter_block`` is the *single* definition of the peer-encounter
+partial update: distance test, area isolation, activity gating, and
+self-exclusion of one (row-block x column-block) pair, returning the
+unnormalized neighbor sums and per-row neighbor counts. Every engine path
+composes it:
+
+- single host: one call with the whole population as both blocks
+  (``encounter_mix_reference``);
+- distributed: one call per ring hop, the column block streamed around the
+  mesh mule axis by ``ppermute`` (``repro.baselines.gossip``), partials
+  accumulated blockwise;
+- the Pallas kernel re-implements the same math tile by tile
+  (``kernel.py``), pinned to this oracle by ``tests/test_kernels_encounter``.
+
+Because a 1-shard ring *is* the reference call, the distributed engines are
+bitwise-equal to single host on a 1-device mesh by construction (under the
+engines' default ``enc_backend="ref"``; the Pallas path trades that for
+tile throughput and is pinned to this oracle by tolerance instead).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def encounter_gate(pos_r: jnp.ndarray, area_r: jnp.ndarray,
+                   act_r: Optional[jnp.ndarray], row0,
+                   pos_v: jnp.ndarray, area_v: jnp.ndarray,
+                   act_v: Optional[jnp.ndarray], col0
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pairwise distances + every non-distance encounter gate of one
+    (row block x visiting block) pair.
+
+    pos_r [R, 2], area_r [R], act_r [R] bool (None == all active), row0 the
+    rows' global population offset; ``*_v``/``col0`` likewise for the
+    visiting block. Returns (d2 [R, V], gate [R, V] bool) where ``gate``
+    ANDs area isolation, both-sides activity, and self-exclusion — the
+    single definition every consumer (mean mix, nearest-peer search,
+    Pallas tiles) composes with its own radius test.
+    """
+    d2 = jnp.sum((pos_r[:, None] - pos_v[None, :]) ** 2, axis=-1)
+    gate = area_r[:, None] == area_v[None, :]
+    if act_r is not None:
+        gate = gate & act_r[:, None]
+    if act_v is not None:
+        gate = gate & act_v[None, :]
+    ridx = row0 + jnp.arange(pos_r.shape[0])
+    cidx = col0 + jnp.arange(pos_v.shape[0])
+    gate = gate & (ridx[:, None] != cidx[None, :])      # no self-encounter
+    return d2, gate
+
+
+def encounter_block(pos_r: jnp.ndarray, area_r: jnp.ndarray,
+                    act_r: Optional[jnp.ndarray], row0,
+                    pos_v: jnp.ndarray, area_v: jnp.ndarray,
+                    act_v: Optional[jnp.ndarray], col0,
+                    weights_v: jnp.ndarray, radius: float
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Partial encounter mix of a row block against a visiting column block.
+
+    ``encounter_gate`` arguments plus weights_v [V, D], the visiting
+    models flattened. Returns (acc [R, D] unnormalized neighbor sums,
+    mass [R] counts).
+    """
+    d2, gate = encounter_gate(pos_r, area_r, act_r, row0,
+                              pos_v, area_v, act_v, col0)
+    e = ((d2 <= radius ** 2) & gate).astype(jnp.float32)
+    return e @ weights_v, jnp.sum(e, axis=1)
+
+
+def normalize_mix(acc: jnp.ndarray, mass: jnp.ndarray) -> jnp.ndarray:
+    """Row-normalize accumulated neighbor sums (zero rows stay zero)."""
+    return acc / jnp.maximum(mass, 1e-12)[:, None]
+
+
+def encounter_mix_reference(pos: jnp.ndarray, area: jnp.ndarray,
+                            active: Optional[jnp.ndarray],
+                            weights: jnp.ndarray, *, radius: float
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """pos [M, 2] x area [M] x weights [M, D] -> (mixed [M, D], mass [M]).
+
+    mixed[i] = mean of weights[j] over encountered peers j (same area,
+    within ``radius``, both active, j != i); rows with no peer are zero and
+    callers gate on ``mass``.
+    """
+    acc, mass = encounter_block(pos, area, active, 0, pos, area, active, 0,
+                                weights, radius)
+    return normalize_mix(acc, mass), mass

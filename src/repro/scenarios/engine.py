@@ -18,7 +18,10 @@ mule state and colocation columns shard, fixed-device state replicates, and
 step, so a mule-sharded experiment is ONE program instead of one
 ``shard_map`` dispatch per step (the retired ``make_distributed_step``
 path, preserved by ``run_population_distributed_loop`` as the parity
-reference). Multi-seed sweeps compose: ``run_sweep_distributed`` stacks the
+reference). Every ``METHODS_MOBILE`` method lowers to the distributed
+step through the one ``repro.core.method_program`` table — the
+peer-encounter baselines cross shards via its ring ``ppermute``
+exchange. Multi-seed sweeps compose: ``run_sweep_distributed`` stacks the
 seed ``vmap`` axis *inside* the shard_map block (i.e. outside the mule
 axis, unsharded), one program per method, bitwise-equal per lane to
 sequential distributed runs.
@@ -177,7 +180,8 @@ def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
                 fid_t, exch_t, pos_t, act_t, t, bt = xs
                 ks = jax.random.fold_in(key, t)
             st = step_fn(st, {"fixed_id": fid_t, "exchange": exch_t,
-                              "pos": pos_t, "active": act_t, "t": t}, bt, ks)
+                              "pos": pos_t, "area": area, "active": act_t,
+                              "t": t}, bt, ks)
             last = jnp.where((fid_t >= 0) & act_t, fid_t, last)
             return (st, last), None
 
@@ -293,7 +297,8 @@ def get_compiled_replay(state, fid, exch, pos, area, act, batches, context,
     step_builder = None
     if mesh is not None:
         from repro.core.distributed import make_distributed_method_step
-        dist_step = make_distributed_method_step(method, train_fn, dcfg)
+        dist_step = make_distributed_method_step(method, train_fn, dcfg,
+                                                 mesh=mesh)
         step_builder = lambda area: dist_step
     core = _build_replay(batches, train_fn, cfg, method=method,
                          eval_every=eval_every, eval_fn=eval_fn,
@@ -400,7 +405,8 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
     jit_local = jax.jit(lambda m, b, k: local_step(m, b, train_fn, k))
     jit_gossip = jax.jit(
         lambda m, p, a, b, k, act: gossip_step(m, p, a, b, train_fn, k,
-                                               active=act))
+                                               active=act,
+                                               backend=cfg.enc_backend))
     jit_oppcl = jax.jit(
         lambda m, p, a, b, k, act: oppcl_step(m, p, a, b, train_fn, k,
                                               active=act))
@@ -506,8 +512,15 @@ def run_population_distributed(state: Dict[str, Any],
              pytrees shard their ``"mule"`` leaves.
     eval_fn: runs shard-local with replicated outputs assumed — read
              replicated state (``fixed_models``) / replicated context only.
-    method:  ``"mlmule"`` or ``"local"`` (peer-encounter baselines need
-             cross-shard neighbor search and stay single-host).
+    method:  any of ``METHODS_MOBILE``. The peer-encounter baselines
+             (gossip/oppcl/mlmule+gossip) cross shards via the method
+             table's ring ``ppermute`` exchange and are bitwise-equal to
+             single host on a 1-device mesh under the default
+             ``enc_backend="ref"`` (the ring always runs the ref block
+             math — a single-host run on the Pallas backend agrees to
+             kernel tolerance instead); blockwise accumulation order
+             makes multi-shard gossip agree to float tolerance, while
+             oppcl's peer pick is order-independent and stays bitwise.
     donate:  donate state buffers (in-place replay); input state is dead
              after the call.
 
@@ -559,8 +572,9 @@ def run_population_distributed_loop(state: Dict[str, Any],
         for k, v in state.items()
     }
     info_specs = {"fixed_id": P(ax), "exchange": P(ax), "pos": P(ax),
-                  "active": P(ax), "t": P()}
-    step_core = make_distributed_method_step(method, train_fn, dcfg)
+                  "area": P(ax), "active": P(ax), "t": P()}
+    step_core = make_distributed_method_step(method, train_fn, dcfg,
+                                             mesh=mesh)
     step = jax.jit(shard_map(
         step_core, mesh=mesh,
         in_specs=(state_specs, info_specs, P(), P()),
@@ -577,8 +591,8 @@ def run_population_distributed_loop(state: Dict[str, Any],
         else:
             ks = jax.random.fold_in(key, t)
             bt = jax.tree.map(lambda l: l[t], batches)
-        info = {"fixed_id": fid, "exchange": exch, "pos": pos, "active": act,
-                "t": jnp.asarray(t, jnp.int32)}
+        info = {"fixed_id": fid, "exchange": exch, "pos": pos, "area": area,
+                "active": act, "t": jnp.asarray(t, jnp.int32)}
         state = step(state, info, bt, ks)
         last_fid = jnp.where((fid >= 0) & act, fid, last_fid)
     return state, last_fid

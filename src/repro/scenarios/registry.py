@@ -263,6 +263,25 @@ register(ScenarioSpec(
                 "cross-city travelers: affinity groups must form per city "
                 "without cross-area leakage."))
 
+# -- HAR task variants -------------------------------------------------------
+# Same mobility as the image-task trace scenarios, but the harness binds
+# the paper's LSTM-CNN HAR stack (task="har" selects the IMU dataset and
+# ``repro.configs.mule_lstm_cnn`` data shapes — Fig 8/9's model) instead of
+# the CNN/CIFAR-like pipeline, so sequence models ride every engine path.
+
+register(ScenarioSpec(
+    name="har_commuter", colocation=_from_trace(commuter_trace),
+    mode="mobile", dist="shards", task="har",
+    description="Fig 8's IMU HAR task under commuter mobility: LSTM-CNN "
+                "models hand across home/work spaces each day."))
+
+register(ScenarioSpec(
+    name="har_shift_worker", colocation=_from_trace(shift_worker_trace),
+    mode="mobile", dist="shards", task="har",
+    description="IMU HAR with rotating crews: LSTM-CNN models relay "
+                "between workplaces shift by shift."))
+
+
 register(ScenarioSpec(
     name="mixed_cadence",
     colocation=_from_trace(commuter_trace),

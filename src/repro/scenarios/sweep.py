@@ -31,7 +31,10 @@ engine's mesh: the seed ``vmap`` sits *inside* the ``shard_map`` block —
 stacked outside the sharded mule axis, unsharded — so a distributed
 multi-seed sweep is still one program per method, and each lane is
 bitwise-equal to a sequential ``run_population_distributed`` call on the
-same mesh (``tests/test_distributed.py`` pins it).
+same mesh (``tests/test_distributed.py`` pins it). All five
+``METHODS_MOBILE`` sweep distributed: the peer-encounter baselines' ring
+``ppermute`` exchange batches under the seed vmap like any other
+collective (``tests/test_distributed_engine.py`` pins a gossip lane).
 """
 from __future__ import annotations
 
@@ -149,7 +152,9 @@ def run_sweep_distributed(states: Dict[str, Any], colocations: Dict[str, Any],
     the ``shard_map`` block (unsharded, outside the mule axis), so the
     whole distributed sweep is one compiled program per method and lane
     ``i`` is bitwise-equal to the ``i``-th sequential
-    ``run_population_distributed`` call.
+    ``run_population_distributed`` call. ``methods`` accepts any of the
+    five ``METHODS_MOBILE`` — the peer-encounter baselines ride their ring
+    exchange inside the vmapped scan.
     """
     return run_sweep(states, colocations, batches, train_fn, dcfg.pop, keys,
                      eval_every=eval_every, eval_fn=eval_fn,

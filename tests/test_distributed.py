@@ -114,6 +114,68 @@ print("OK")
 
 
 @pytest.mark.slow
+def test_peer_baselines_sharded_multidevice(multi_device_runner):
+    """Ring-ppermute peer baselines on a real (2, 4) pod x data mesh:
+    scan == per-step driver bitwise for gossip/oppcl/mlmule+gossip, and
+    vs single host — oppcl bitwise (its peer pick is a lexicographic min,
+    independent of ring order, and all its float math is row-local),
+    gossip/hybrid to tolerance (ring/psum accumulation order)."""
+    multi_device_runner(_SCAN_PRELUDE + """
+from repro.mobility import markov_churn_mask
+for method in ("gossip", "oppcl", "mlmule+gossip"):
+    pop, co, batch_fn, train_fn, pcfg = linear_setup(
+        "mobile", init_threshold=1e9, warmup=10**6)
+    co = dict(co)
+    co["active"] = markov_churn_mask(77, T, M, p_leave=0.2, p_join=0.3)
+    assert co["active"].any() and not co["active"].all()
+    dcfg = DistributedConfig(pop=pcfg)
+    dstate = to_distributed_state(pop, dcfg)
+    key = jax.random.PRNGKey(7)
+    f1, aux = run_population_distributed(dstate, co, batch_fn, train_fn,
+                                         dcfg, mesh, key, method=method)
+    f2, last2 = run_population_distributed_loop(
+        dstate, co, batch_fn, train_fn, dcfg, mesh, key, method=method)
+    assert_bitwise(f1["mule_models"], f2["mule_models"],
+                   ("scan-vs-loop", method))
+    assert np.array_equal(np.asarray(aux["last_fid"]), np.asarray(last2))
+    host, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                             method=method)
+    if method == "oppcl":
+        assert_bitwise(host["mule_models"], f1["mule_models"],
+                       "oppcl host-vs-dist")
+    else:
+        for a, b in zip(jax.tree.leaves(host["mule_models"]),
+                        jax.tree.leaves(f1["mule_models"])):
+            err = float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+            assert err < 1e-5, ("host-vs-dist", method, err)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_migrate_mules_round_trip_bitwise(multi_device_runner):
+    """n_pods applications of migrate_mules walk every flagged slot around
+    the whole pod ring back to its origin — leaves round-trip bitwise."""
+    multi_device_runner("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import migrate_mules
+mesh = jax.make_mesh((2, 2), ("pod", "data"))
+M = 8
+models = {"w": jax.random.normal(jax.random.PRNGKey(0), (M, 3)),
+          "b": jax.random.normal(jax.random.PRNGKey(1), (M,))}
+models = jax.device_put(models, NamedSharding(mesh, P("data")))
+mask = jnp.array([True, False, True, False, False, True, False, False])
+out = models
+for _ in range(mesh.shape["pod"]):
+    out = migrate_mules(out, mask, mesh)
+for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(models)):
+    assert np.array_equal(np.asarray(a), np.asarray(b)), "round trip diverged"
+print("OK")
+""", n_devices=4)
+
+
+@pytest.mark.slow
 def test_distributed_engine_matches_reference(multi_device_runner):
     multi_device_runner("""
 import jax, jax.numpy as jnp

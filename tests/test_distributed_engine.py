@@ -132,13 +132,20 @@ def test_to_distributed_state_carries_history():
 
 def test_distributed_rejects_unsupported_methods_and_shapes():
     import types
+    from repro.core.distributed import make_distributed_method_step
+    from repro.core.method_program import get_program
     from repro.scenarios.engine import _check_mule_sharding
     pop, co, batch_fn, train_fn, pcfg = _linear_setup("fixed")
     dcfg = DistributedConfig(pop=pcfg)
     with pytest.raises(ValueError, match="mlmule"):
         run_population_distributed(to_distributed_state(pop, dcfg), co,
                                    batch_fn, train_fn, dcfg, _mesh(),
-                                   jax.random.PRNGKey(0), method="gossip")
+                                   jax.random.PRNGKey(0), method="bogus")
+    with pytest.raises(ValueError, match="mlmule"):
+        get_program("bogus")
+    # peer methods need the mesh to size the ring exchange
+    with pytest.raises(ValueError, match="ring"):
+        make_distributed_method_step("gossip", train_fn, dcfg)
     with pytest.raises(ValueError, match="stat"):
         init_distributed_freshness(2, FreshnessConfig(stat="bogus"))
     fake_mesh = types.SimpleNamespace(shape={"pod": 1, "data": 4})
@@ -238,6 +245,101 @@ def test_churn_all_ones_mask_matches_dense_distributed():
         to_distributed_state(pop, dcfg), co_ones, batch_fn, train_fn, dcfg,
         _mesh(), key)
     _assert_trees_bitwise(masked, dense)
+
+
+# ---------------------------------------------------------------------------
+# sharded peer-encounter baselines (ring ppermute exchange)
+# ---------------------------------------------------------------------------
+
+PEER_METHODS = ("gossip", "oppcl", "mlmule+gossip")
+
+
+@pytest.mark.parametrize("method", PEER_METHODS)
+def test_peer_distributed_scan_matches_loop(method):
+    """Ring-sharded peer baselines: shard_map scan == per-step shard_map
+    driver, bitwise (the ring + cadence cond fold into the scan body)."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    dcfg = DistributedConfig(pop=pcfg)
+    dstate = to_distributed_state(pop, dcfg)
+    mesh, key = _mesh(), jax.random.PRNGKey(41)
+    final, aux = run_population_distributed(dstate, co, batch_fn, train_fn,
+                                            dcfg, mesh, key, method=method)
+    ref, ref_last = run_population_distributed_loop(
+        dstate, co, batch_fn, train_fn, dcfg, mesh, key, method=method)
+    _assert_trees_bitwise(final, ref)
+    np.testing.assert_array_equal(np.asarray(aux["last_fid"]),
+                                  np.asarray(ref_last))
+
+
+@pytest.mark.parametrize("masked", [False, True])
+@pytest.mark.parametrize("method", ("gossip", "oppcl"))
+def test_peer_distributed_matches_single_host_bitwise(method, masked):
+    """gossip/oppcl distributed == single-host, bitwise, dense and
+    churn-masked (a 1-shard ring is exactly the single-host encounter
+    computation; training keys come from the same global split)."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup("mobile")
+    if masked:
+        co = _churned(co, seed=7)
+    dcfg = DistributedConfig(pop=pcfg)
+    key = jax.random.PRNGKey(43)
+    host, haux = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                                method=method)
+    dist, daux = run_population_distributed(
+        to_distributed_state(pop, dcfg), co, batch_fn, train_fn, dcfg,
+        _mesh(), key, method=method)
+    _assert_trees_bitwise(host["mule_models"], dist["mule_models"])
+    np.testing.assert_array_equal(np.asarray(haux["last_fid"]),
+                                  np.asarray(daux["last_fid"]))
+
+
+def test_hybrid_distributed_matches_single_host_bitwise():
+    """mlmule+gossip: the fused-psum space exchange AND the ring gossip
+    exchange both match single host on the 1-device mesh (accept-all
+    freshness filter bridges the freshness-state layouts)."""
+    pop, co, batch_fn, train_fn, pcfg = _linear_setup(
+        "mobile", init_threshold=1e9, warmup=10**6)
+    co = _churned(co, seed=3)
+    dcfg = DistributedConfig(pop=pcfg)
+    key = jax.random.PRNGKey(47)
+    host, _ = run_population(pop, co, batch_fn, train_fn, pcfg, key,
+                             method="mlmule+gossip")
+    dist, _ = run_population_distributed(
+        to_distributed_state(pop, dcfg), co, batch_fn, train_fn, dcfg,
+        _mesh(), key, method="mlmule+gossip")
+    for k in ("fixed_models", "mule_models", "mule_ts"):
+        _assert_trees_bitwise(host[k], dist[k])
+
+
+def test_peer_distributed_sweep_matches_sequential():
+    """The seed vmap composes with the ring ppermute: lane i of a
+    distributed gossip sweep == the i-th sequential distributed run."""
+    seeds = [0, 1]
+    setups = [_linear_setup("mobile", seed=s) for s in seeds]
+    _, _, batch_fn, train_fn, pcfg = setups[0]
+    dcfg = DistributedConfig(pop=pcfg)
+    mesh = _mesh()
+    keys = [jax.random.PRNGKey(700 + s) for s in seeds]
+    finals = [run_population_distributed(
+        to_distributed_state(st, dcfg), co, batch_fn, train_fn, dcfg, mesh,
+        k, method="gossip")[0]
+        for (st, co, _, _, _), k in zip(setups, keys)]
+    states = stack_trees([to_distributed_state(s[0], dcfg) for s in setups])
+    cos = stack_colocations([s[1] for s in setups])
+    vf, _ = run_sweep_distributed(states, cos, batch_fn, train_fn, dcfg,
+                                  mesh, stack_trees(keys), methods="gossip")
+    for i in range(len(seeds)):
+        _assert_trees_bitwise(jax.tree.map(lambda l: l[i], vf), finals[i])
+
+
+def test_migrate_mules_single_pod_identity():
+    """On a 1-pod mesh the migration ring is a self-loop: flagged or not,
+    every leaf round-trips bitwise (multi-pod round trip: slow tier)."""
+    from repro.core.distributed import migrate_mules
+    mesh = _mesh()
+    models = {"w": jnp.arange(12, dtype=jnp.float32).reshape(6, 2)}
+    mask = jnp.array([True, False, True, True, False, False])
+    out = migrate_mules(models, mask, mesh)
+    _assert_trees_bitwise(out, models)
 
 
 def test_churn_distributed_sweep_matches_sequential():
