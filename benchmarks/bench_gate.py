@@ -1,0 +1,279 @@
+"""Perf regression gate: every ``BENCH_*.json`` artifact is a ratchet.
+
+The repo commits one JSON artifact per benchmark family (sweep, distributed,
+churn, encounter, roofline). Before this gate they were snapshots — a future
+PR could silently give back the 5.9x distributed scan or the 1.87x tiled
+encounter win and nothing would notice. This module makes them a gated
+trajectory:
+
+**Schema validation** (fast, no benchmark execution — tier-1 runs it on
+every push)::
+
+    PYTHONPATH=src python -m benchmarks.bench_gate --check-committed
+
+fails if any committed artifact is missing, malformed, names the wrong
+``bench`` entry point, or is missing/mistyping a required key (including
+its headline metric), so a hand-edited or truncated artifact cannot land.
+
+**Regression gating** (the CI slow lane's produce-then-gate)::
+
+    cp benchmarks/BENCH_*.json "$BASELINE"      # snapshot the committed ratchet
+    PYTHONPATH=src python -m benchmarks.engine_micro --sweep --churn ...
+    PYTHONPATH=src python -m benchmarks.bench_gate \
+        --baseline "$BASELINE" --fresh benchmarks
+
+compares each freshly produced artifact against the committed one on that
+artifact's HEADLINE metric and fails on a regression beyond the threshold
+(default ``10%``, ``--threshold 0.1``). Direction is per-artifact (speedups
+must not fall, overheads must not rise); near-zero metrics (the churn
+overhead) also carry an absolute slack so relative noise on tiny values
+cannot flake the lane.
+
+**The ratchet workflow**: when a PR makes a hot path faster, re-run the
+producing benchmark and commit the fresh artifact — the gate then defends
+the new number. Improvements always pass; only the committed file moves the
+floor. Artifact schemas live in :data:`ARTIFACTS` below; see
+``benchmarks/README.md`` for the human-readable version.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_THRESHOLD = 0.10
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+class GateSchemaError(ValueError):
+    """An artifact violates its declared schema (wrong/missing/mistyped)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtifactSchema:
+    """What the gate knows about one committed ``BENCH_*.json`` family."""
+    bench: str                        # required value of the "bench" key
+    required: Dict[str, type]         # top-level metric keys and their types
+    headline: str                     # the ratcheted metric (in ``required``)
+    higher_is_better: bool            # regression direction
+    abs_slack: float = 0.0            # additive tolerance for near-zero metrics
+
+    def describe(self) -> str:
+        arrow = "higher" if self.higher_is_better else "lower"
+        return f"headline={self.headline} ({arrow} is better)"
+
+
+ARTIFACTS: Dict[str, ArtifactSchema] = {
+    "BENCH_sweep.json": ArtifactSchema(
+        bench="engine_micro.run_sweep_bench",
+        required={"sequential_retraced_s": float, "vmapped_cold_s": float,
+                  "vmapped_warm_s": float, "speedup_vs_sequential": float,
+                  "retraces_second_call": int},
+        headline="speedup_vs_sequential", higher_is_better=True),
+    "BENCH_distributed.json": ArtifactSchema(
+        bench="engine_micro.run_distributed_bench",
+        required={"per_step_loop_s": float, "scan_cold_s": float,
+                  "scan_warm_s": float, "scan_warm_median_sketch_s": float,
+                  "speedup_vs_per_step": float, "retraces_second_call": int,
+                  "sweep_bitwise_equal": bool},
+        headline="speedup_vs_per_step", higher_is_better=True),
+    "BENCH_churn.json": ArtifactSchema(
+        bench="engine_micro.run_churn_bench",
+        required={"dense_warm_s": float, "masked_warm_s": float,
+                  "overhead_pct": float, "retraces_masked_call": int,
+                  "active_frac": float},
+        # churn overhead hovers near zero: 10% of 6% is noise, so the gate
+        # adds 2 percentage points of absolute slack on top
+        headline="overhead_pct", higher_is_better=False, abs_slack=2.0),
+    "BENCH_encounter.json": ArtifactSchema(
+        bench="engine_micro.run_encounter_bench",
+        required={"dense_warm_s": float, "tiled_warm_s": float,
+                  "speedup_tiled_vs_dense": float, "host_gossip_warm_s": float,
+                  "ring_gossip_warm_s": float, "ring_vs_host": float},
+        headline="speedup_tiled_vs_dense", higher_is_better=True),
+    "BENCH_roofline.json": ArtifactSchema(
+        bench="autotune.run_roofline",
+        required={"roofline": list, "tuned": dict,
+                  "tuned_speedup_vs_default": float},
+        headline="tuned_speedup_vs_default", higher_is_better=True,
+        # the tuned-vs-default ratio sits near 1.0 when the hand default is
+        # already optimal; absolute slack keeps timing jitter out of the lane
+        abs_slack=0.05),
+}
+
+
+def _typecheck(key: str, value, expected: type) -> None:
+    if expected is float:
+        ok = isinstance(value, (int, float)) and not isinstance(value, bool)
+    elif expected is int:
+        ok = isinstance(value, int) and not isinstance(value, bool)
+    else:
+        ok = isinstance(value, expected)
+    if not ok:
+        raise GateSchemaError(
+            f"key {key!r}: expected {expected.__name__}, got "
+            f"{type(value).__name__} ({value!r})")
+
+
+def validate(name: str, payload) -> ArtifactSchema:
+    """Validate one artifact payload against its declared schema.
+
+    Raises :class:`GateSchemaError` (unknown artifact name, non-dict
+    payload, wrong ``bench``, missing ``config``, missing or mistyped
+    required key). Returns the schema on success.
+    """
+    schema = ARTIFACTS.get(name)
+    if schema is None:
+        raise GateSchemaError(
+            f"unknown artifact {name!r}; the gate knows "
+            f"{sorted(ARTIFACTS)}")
+    if not isinstance(payload, dict):
+        raise GateSchemaError(f"{name}: payload is {type(payload).__name__},"
+                              f" not an object")
+    if payload.get("bench") != schema.bench:
+        raise GateSchemaError(
+            f"{name}: bench={payload.get('bench')!r}, expected "
+            f"{schema.bench!r}")
+    if not isinstance(payload.get("config"), dict):
+        raise GateSchemaError(f"{name}: missing config object")
+    for key, expected in schema.required.items():
+        if key not in payload:
+            raise GateSchemaError(f"{name}: missing required key {key!r}")
+        _typecheck(f"{name}:{key}", payload[key], expected)
+    return schema
+
+
+@dataclasses.dataclass
+class GateResult:
+    name: str
+    ok: bool
+    headline: str
+    baseline: float
+    fresh: float
+    floor: float                       # the value fresh had to stay within
+    reason: str
+
+    def row(self) -> str:
+        verdict = "PASS" if self.ok else "FAIL"
+        return (f"{verdict}  {self.name:28s} {self.headline}: "
+                f"{self.baseline:.4g} -> {self.fresh:.4g} "
+                f"(limit {self.floor:.4g})  {self.reason}")
+
+
+def gate_artifact(name: str, baseline: Dict, fresh: Dict,
+                  threshold: float = DEFAULT_THRESHOLD) -> GateResult:
+    """Compare a fresh artifact against the committed baseline.
+
+    Both payloads are schema-validated first (raises
+    :class:`GateSchemaError`). The fresh headline must not regress past
+    ``threshold`` (relative) plus the artifact's absolute slack:
+
+    - higher-is-better: ``fresh >= baseline * (1 - threshold) - abs_slack``
+    - lower-is-better:  ``fresh <= baseline * (1 + threshold) + abs_slack``
+    """
+    schema = validate(name, baseline)
+    validate(name, fresh)
+    b = float(baseline[schema.headline])
+    f = float(fresh[schema.headline])
+    if schema.higher_is_better:
+        floor = b * (1.0 - threshold) - schema.abs_slack
+        ok = f >= floor
+        reason = ("improved or held" if f >= b else
+                  f"dropped {(1 - f / b) * 100:.1f}%" if b else "dropped")
+    else:
+        floor = b * (1.0 + threshold) + schema.abs_slack
+        ok = f <= floor
+        reason = ("improved or held" if f <= b else
+                  f"rose {(f - b):.4g}")
+    return GateResult(name=name, ok=ok, headline=schema.headline,
+                      baseline=b, fresh=f, floor=floor, reason=reason)
+
+
+def _load(path: str) -> Dict:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except FileNotFoundError:
+        raise GateSchemaError(f"artifact missing: {path}")
+    except ValueError as e:
+        raise GateSchemaError(f"artifact unreadable: {path}: {e}")
+
+
+def check_committed(directory: str = _HERE,
+                    names: Optional[List[str]] = None) -> List[str]:
+    """Schema-validate every committed artifact; returns validated names.
+
+    This is the tier-1 step: no benchmark runs, just proof that what is
+    committed parses and matches its schema (a malformed artifact would
+    otherwise only surface in the weekly slow lane — or never).
+    """
+    out = []
+    for name in sorted(names or ARTIFACTS):
+        validate(name, _load(os.path.join(directory, name)))
+        out.append(name)
+    return out
+
+
+def gate_all(baseline_dir: str, fresh_dir: str,
+             threshold: float = DEFAULT_THRESHOLD,
+             names: Optional[List[str]] = None) -> List[GateResult]:
+    """Gate every (or the named) artifact pair; schema errors propagate."""
+    results = []
+    for name in sorted(names or ARTIFACTS):
+        results.append(gate_artifact(
+            name, _load(os.path.join(baseline_dir, name)),
+            _load(os.path.join(fresh_dir, name)), threshold))
+    return results
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="schema-validate and regression-gate BENCH_*.json "
+                    "artifacts (see module docstring)")
+    ap.add_argument("--check-committed", action="store_true",
+                    help="schema-validate committed artifacts only "
+                         "(no baseline comparison)")
+    ap.add_argument("--dir", default=_HERE,
+                    help="artifact directory for --check-committed")
+    ap.add_argument("--baseline",
+                    help="directory holding the committed (baseline) "
+                         "artifacts")
+    ap.add_argument("--fresh", default=_HERE,
+                    help="directory holding freshly produced artifacts")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression tolerance on the headline "
+                         "metric (default 0.10)")
+    ap.add_argument("--artifact", action="append",
+                    help="gate only this artifact (repeatable)")
+    args = ap.parse_args(argv)
+
+    try:
+        if args.check_committed:
+            for name in check_committed(args.dir, args.artifact):
+                print(f"OK    {name:28s} "
+                      f"{ARTIFACTS[name].describe()}")
+            return 0
+        if not args.baseline:
+            ap.error("--baseline DIR is required unless --check-committed")
+        results = gate_all(args.baseline, args.fresh, args.threshold,
+                           args.artifact)
+    except GateSchemaError as e:
+        print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        return 2
+    for r in results:
+        print(r.row())
+    failed = [r for r in results if not r.ok]
+    if failed:
+        print(f"\n{len(failed)} artifact(s) regressed past "
+              f"{args.threshold:.0%} — either fix the regression or "
+              f"consciously re-commit the producing benchmark's fresh "
+              f"artifact to move the ratchet", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

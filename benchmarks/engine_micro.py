@@ -41,10 +41,24 @@ state pytree to the cached replay (``run_population(..., donate=True)``):
 XLA aliases the state buffers into the outputs, so steady-state peak drops
 by the full population size.
 
+``run_roofline_bench()`` — the autotuner (``repro.launch.autotune``): the
+scan-aware HLO analysis over the compiled engine step per (method × M ×
+mesh) plus the measured kernel block-size sweeps, producing the tuning
+cache ``BENCH_roofline.json`` that ``encounter_mix``/``mule_agg`` read
+their tile sizes from. Needs ≥ 8 devices for the mesh rows; re-execs
+itself with forced host devices like the distributed bench.
+
+Every artifact is a gated ratchet: ``--gate-baseline DIR`` compares
+whatever artifacts this invocation produced against the committed copies
+in DIR via ``benchmarks.bench_gate`` and exits non-zero on a regression
+(the CI slow lane snapshots the checkout's artifacts and passes that
+directory here — see benchmarks/README.md).
+
   PYTHONPATH=src python -m benchmarks.engine_micro               # all
   PYTHONPATH=src python -m benchmarks.engine_micro --sweep       # sweep only
   PYTHONPATH=src python -m benchmarks.engine_micro --distributed # dist only
   PYTHONPATH=src python -m benchmarks.engine_micro --churn       # churn only
+  PYTHONPATH=src python -m benchmarks.engine_micro --roofline    # autotune
 """
 from __future__ import annotations
 
@@ -75,6 +89,8 @@ _DEFAULT_CHURN_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   "BENCH_churn.json")
 _DEFAULT_ENC_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "BENCH_encounter.json")
+_DEFAULT_ROOF_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "BENCH_roofline.json")
 
 
 def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4, seed=0):
@@ -483,6 +499,58 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
     return rows
 
 
+def run_roofline_bench(n_devices: int = 8, out_path: str = _DEFAULT_ROOF_OUT,
+                       reps: int = 3):
+    """Roofline autotune sweep -> the ``BENCH_roofline.json`` tuning cache.
+
+    Runs ``repro.launch.autotune.run_roofline``: the compiled engine step
+    is decomposed per (method × M) on the single-host engine and per
+    method on a (2, 4) mesh (collective terms), and every feasible
+    ``encounter_mix``/``mule_agg`` block-size candidate is measured on the
+    interpret path; the argmin selections land in the cache the kernel
+    wrappers read. The headline (``tuned_speedup_vs_default``) is gated by
+    ``bench_gate`` like every other artifact. Needs ``n_devices`` for the
+    mesh rows; re-execs itself with forced host devices otherwise.
+    """
+    from repro.launch.autotune import run_roofline
+
+    out_path = os.path.abspath(out_path)
+    if jax.device_count() < n_devices:
+        if os.environ.get("_REPRO_DIST_BENCH_CHILD"):
+            raise RuntimeError(
+                f"need >= {n_devices} devices but forcing host devices "
+                f"yielded {jax.device_count()} on backend "
+                f"{jax.default_backend()!r}")
+        _respawn_with_devices(n_devices, out_path, flag="--roofline",
+                              out_flag="--out-roofline")
+        with open(out_path) as f:
+            payload = json.load(f)
+    else:
+        mesh = jax.make_mesh((2, n_devices // 2), ("pod", "data"))
+        payload = run_roofline(out_path, reps=reps, mesh=mesh)
+        print(f"wrote {out_path}")
+
+    rows = []
+    for r in payload["roofline"]:
+        rows.append((f"roofline.{r['method']}.M{r['n_mules']}"
+                     f".mesh{r['mesh']}",
+                     r["t_memory_us_per_step"],
+                     f"us/step memory term, dominant={r['dominant']}"))
+    for e in payload["tuned"]["mule_agg"]:
+        rows.append((f"tune.mule_agg.d{e['d']}", e["block_d"],
+                     f"block_d ({e['speedup_vs_default']}x vs default)"))
+    for e in payload["tuned"]["encounter_mix"]:
+        rows.append((f"tune.encounter.m{e['m']}.d{e['d']}",
+                     e["block_m"] * 10000 + e["block_d"],
+                     f"block_m={e['block_m']} block_d={e['block_d']} "
+                     f"({e['speedup_vs_default']}x vs default)"))
+    rows.append(("tune.speedup_vs_default",
+                 payload["tuned_speedup_vs_default"], "x (geomean, gated)"))
+    for name, val, derived in rows:
+        print(f"{name},{val},{derived}")
+    return rows
+
+
 def run_distributed_bench(n_devices: int = 8, n_mules: int = 64,
                           steps: int = 400, n_seeds: int = 4,
                           out_path: str = _DEFAULT_DIST_OUT):
@@ -629,23 +697,54 @@ if __name__ == "__main__":
                     help="run only the churn-mask overhead benchmark")
     ap.add_argument("--encounter", action="store_true",
                     help="run only the encounter-mix benchmark")
+    ap.add_argument("--roofline", action="store_true",
+                    help="run only the roofline autotune sweep")
+    ap.add_argument("--gate-baseline", metavar="DIR",
+                    help="after producing artifacts, regression-gate them "
+                         "against the committed copies in DIR "
+                         "(benchmarks.bench_gate; exits non-zero on "
+                         "regression)")
     ap.add_argument("--out", default=_DEFAULT_OUT)
     ap.add_argument("--out-distributed", default=_DEFAULT_DIST_OUT)
     ap.add_argument("--out-churn", default=_DEFAULT_CHURN_OUT)
     ap.add_argument("--out-encounter", default=_DEFAULT_ENC_OUT)
+    ap.add_argument("--out-roofline", default=_DEFAULT_ROOF_OUT)
     args = ap.parse_args()
+    produced = []                    # (artifact name, fresh path) per bench
     if args.distributed:
         run_distributed_bench(out_path=args.out_distributed)
+        produced.append(("BENCH_distributed.json", args.out_distributed))
     elif args.sweep:
         run_sweep_bench(out_path=args.out)
+        produced.append(("BENCH_sweep.json", args.out))
     elif args.churn:
         run_churn_bench(out_path=args.out_churn)
+        produced.append(("BENCH_churn.json", args.out_churn))
     elif args.encounter:
         run_encounter_bench(out_path=args.out_encounter)
+        produced.append(("BENCH_encounter.json", args.out_encounter))
+    elif args.roofline:
+        run_roofline_bench(out_path=args.out_roofline)
+        produced.append(("BENCH_roofline.json", args.out_roofline))
     else:
         run()
         run_donation_bench()
         run_sweep_bench(out_path=args.out)
+        produced.append(("BENCH_sweep.json", args.out))
         run_churn_bench(out_path=args.out_churn)
+        produced.append(("BENCH_churn.json", args.out_churn))
         run_encounter_bench(out_path=args.out_encounter)
+        produced.append(("BENCH_encounter.json", args.out_encounter))
         run_distributed_bench(out_path=args.out_distributed)
+        produced.append(("BENCH_distributed.json", args.out_distributed))
+        run_roofline_bench(out_path=args.out_roofline)
+        produced.append(("BENCH_roofline.json", args.out_roofline))
+    if args.gate_baseline:
+        from benchmarks import bench_gate
+        results = [bench_gate.gate_artifact(
+            name, bench_gate._load(os.path.join(args.gate_baseline, name)),
+            bench_gate._load(path)) for name, path in produced]
+        for r in results:
+            print(r.row())
+        if any(not r.ok for r in results):
+            raise SystemExit(1)

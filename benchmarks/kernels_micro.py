@@ -54,12 +54,16 @@ def run():
 
 
 def run_block_d_sweep():
-    """mule_agg D-tile sweep: the measurements behind ops._BLOCK_D_TABLE.
+    """mule_agg D-tile sweep — the MANUAL ancestor of the autotuner.
 
     Times the interpret-path kernel (wall-clock tracks relative block
     configurations on CPU, not TPU latency) at several (D, block_d) cells
-    and prints the per-D argmin — paste those into ``_BLOCK_D_TABLE`` in
-    ``repro/kernels/mule_agg/ops.py`` when re-tuning.
+    and prints the per-D argmin next to what ``pick_block_d`` currently
+    returns. Re-tuning now goes through the tuning cache instead of a
+    hand-edited table: ``python -m benchmarks.engine_micro --roofline``
+    re-measures and rewrites ``benchmarks/BENCH_roofline.json``
+    (``repro.launch.autotune``); this sweep survives as a quick
+    cross-check that the cached selection still tracks measurements.
     """
     from repro.kernels.mule_agg.ops import pick_block_d
     k = jax.random.PRNGKey(0)

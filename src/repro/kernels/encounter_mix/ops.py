@@ -9,6 +9,13 @@
 
 ``REPRO_PALLAS_INTERPRET`` overrides the interpret autodetect exactly like
 ``repro.kernels.mule_agg.ops``.
+
+Tile sizes: ``block_m``/``block_d`` left as ``None`` consult the autotune
+cache (``repro.launch.autotune.tuned_encounter_blocks`` — the measured
+selection committed in ``benchmarks/BENCH_roofline.json``, nearest tuned
+[M, D] shape) and fall back to the pre-tuning hand defaults (256, 2048)
+without one. Explicit values always win; ``REPRO_TUNE_CACHE`` repoints
+(or, empty, disables) the cache.
 """
 from __future__ import annotations
 
@@ -26,7 +33,7 @@ from repro.kernels.mule_agg.ops import _env_interpret
 def encounter_mix(pos: jnp.ndarray, area: jnp.ndarray,
                   active: Optional[jnp.ndarray], weights: jnp.ndarray, *,
                   radius: float = 0.15, backend: str = "ref",
-                  block_m: int = 256, block_d: int = 2048,
+                  block_m: int | None = None, block_d: int | None = None,
                   interpret: bool | None = None):
     """pos [M, 2] x area [M] x weights [M, D] -> (mix [M, D], mass [M])."""
     if backend == "auto":
@@ -45,6 +52,11 @@ def encounter_mix(pos: jnp.ndarray, area: jnp.ndarray,
         interpret = True
     if active is None:
         active = jnp.ones((weights.shape[0],), bool)
+    if block_m is None or block_d is None:
+        from repro.launch.autotune import tuned_encounter_blocks
+        tm, td = tuned_encounter_blocks(*weights.shape)
+        block_m = tm if block_m is None else block_m
+        block_d = td if block_d is None else block_d
     return encounter_mix_pallas(pos, area, active, weights, radius=radius,
                                 block_m=block_m, block_d=block_d,
                                 interpret=interpret)

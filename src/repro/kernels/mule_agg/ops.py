@@ -2,10 +2,14 @@
 
 ``block_d`` tuning: the kernel streams [M, block_d] tiles; too small pays
 grid overhead, too large overflows VMEM residency. ``block_d=None`` uses
-the measured size from ``pick_block_d`` (re-measure with
-``python -m benchmarks.kernels_micro`` — the ``mule_agg.block`` rows sweep
-block sizes per D; the pick is the argmin of that sweep on this container's
-interpret path, which tracks relative block behaviour, not TPU latency).
+``pick_block_d``, which consults the autotune cache — the measured
+selection committed in ``benchmarks/BENCH_roofline.json`` by
+``repro.launch.autotune`` (re-measure with
+``python -m benchmarks.engine_micro --roofline``; the selection is the
+argmin of a per-shape candidate sweep on this container's interpret path,
+which tracks relative block behaviour, not TPU latency) — and falls back
+to the hand-measured constant below when no cache is available.
+``REPRO_TUNE_CACHE`` repoints (or, empty, disables) the cache.
 
 ``REPRO_PALLAS_INTERPRET`` overrides the interpret-mode autodetect for
 every call that doesn't pass ``interpret`` explicitly: set to ``1``/``0``
@@ -21,20 +25,19 @@ import jax
 from repro.kernels.mule_agg.kernel import mule_agg_pallas
 from repro.kernels.mule_agg.ref import mule_agg_reference  # noqa: F401
 
-# Measured by benchmarks/kernels_micro.py::run_block_d_sweep on this
-# container: the sweep came out monotone at every D (2^12..2^18) — per-tile
-# dispatch overhead dominates, so the largest tile always won (4096 beat
-# 2048 by ~1.9x at D=2^18) and the "table" collapses to one constant.
-# Capped at 4096 to keep the [M, block_d] tile + [F, block_d] output
-# VMEM-resident at realistic M (64 x 4096 x 4B = 1 MB streamed tile).
-# Re-introduce a (max_d -> block_d) ladder here if a future sweep on real
-# hardware yields a non-constant mapping.
+# Pre-cache fallback, measured by the retired kernels_micro block_d sweep on
+# this container: the sweep came out monotone at every D (2^12..2^18) —
+# per-tile dispatch overhead dominates, so the largest tile always won
+# (4096 beat 2048 by ~1.9x at D=2^18). Capped at 4096 to keep the
+# [M, block_d] tile + [F, block_d] output VMEM-resident at realistic M.
 _BLOCK_D_MEASURED = 4096
 
 
 def pick_block_d(d: int) -> int:
-    """Measured D-tile size (see the tuning note above)."""
-    return _BLOCK_D_MEASURED
+    """Tuned D-tile size: the autotune cache's selection for the nearest
+    measured shape, else the hand-measured fallback constant."""
+    from repro.launch.autotune import tuned_block_d
+    return tuned_block_d(d, default=_BLOCK_D_MEASURED)
 
 
 def _env_interpret() -> bool | None:

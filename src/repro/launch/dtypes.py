@@ -1,0 +1,56 @@
+"""One dtype-width table for every HLO text parser.
+
+``roofline.py`` and ``hlo_analysis.py`` each used to carry a private
+``_DTYPE_BYTES`` dict with a silent ``.get(dtype, 4)`` fallback — an HLO
+module using a dtype neither table knew (a new fp8 variant, a packed int)
+would be costed as f32 without a whisper, skewing every roofline term
+derived from it. This module is now the single source of truth, and unknown
+dtypes are LOUD: ``dtype_bytes`` raises :class:`UnknownDtypeError` naming
+the offending dtype, or — when the caller passes a ``collect`` set —
+records it there and falls back to 4 bytes so a full-module sweep can
+report every unknown at once instead of dying on the first.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+# Width in bytes of every HLO element type the analyzers understand. The
+# sub-byte types (s4/u4, pred packing) are charged one byte — HLO buffers
+# round them up to byte granularity per element in the dumps we parse.
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnz": 1,
+    "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "token": 0,   # sequencing tokens carry no data
+}
+
+
+class UnknownDtypeError(ValueError):
+    """An HLO shape names a dtype missing from :data:`DTYPE_BYTES`."""
+
+    def __init__(self, dtype: str):
+        self.dtype = dtype
+        super().__init__(
+            f"unknown HLO dtype {dtype!r}: add it to "
+            f"repro.launch.dtypes.DTYPE_BYTES (silent f32 fallbacks skew "
+            f"roofline terms)")
+
+
+def dtype_bytes(dtype: str, collect: Optional[Set[str]] = None) -> int:
+    """Bytes per element of an HLO dtype name.
+
+    Raises :class:`UnknownDtypeError` for names not in the table; with a
+    ``collect`` set, unknown names are recorded there and costed as 4 bytes
+    so the caller can finish the sweep and report them all.
+    """
+    width = DTYPE_BYTES.get(dtype)
+    if width is None:
+        if collect is None:
+            raise UnknownDtypeError(dtype)
+        collect.add(dtype)
+        return 4
+    return width

@@ -27,11 +27,7 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
-    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
-    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
-}
+from repro.launch.dtypes import dtype_bytes
 
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _OP_RE = re.compile(
@@ -44,13 +40,14 @@ _SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
 
 
 def _shape_bytes(txt: str) -> int:
+    # unknown dtypes raise UnknownDtypeError — see repro.launch.dtypes
     total = 0
     for d, dims in _SHAPE_RE.findall(txt):
         n = 1
         if dims:
             for x in dims.split(","):
                 n *= int(x)
-        total += n * _DTYPE_BYTES.get(d, 4)
+        total += n * dtype_bytes(d)
     return total
 
 

@@ -18,20 +18,19 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
+from repro.launch.dtypes import dtype_bytes
+
 PEAK_FLOPS = 197e12      # bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip
 ICI_BW = 50e9            # bytes/s per link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1,
-}
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+# attribute blobs whose quoted strings can contain shape-shaped text
+_ATTR_NOISE_RE = re.compile(r"(?:metadata=\{[^}]*\}|backend_config=\S+)")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
@@ -39,15 +38,19 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     if dims:
         for d in dims.split(","):
             n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    return n * dtype_bytes(dtype)
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Sum operand bytes of collective ops in an HLO module dump."""
+    """Sum operand bytes of collective ops in an HLO module dump.
+
+    Unknown dtypes raise :class:`repro.launch.dtypes.UnknownDtypeError`
+    rather than being silently costed as f32.
+    """
     out = {k: 0 for k in _COLLECTIVES}
     for line in hlo_text.splitlines():
-        s = line.strip()
-        m = re.match(r"%?[\w.\-]+\s*=\s*(.*)", s)
+        s = _ATTR_NOISE_RE.sub("", line.strip())
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", s)
         if not m:
             continue
         rhs = m.group(1)

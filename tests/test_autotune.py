@@ -1,0 +1,255 @@
+"""Autotuner tests: cache lookups (env repoint / disable / fallback),
+engine roofline rows, artifact production, and the differential-numerics
+invariant — every block size the tuner may select yields BITWISE-identical
+kernel output, so autotuning can change performance but never results."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch import autotune
+from repro.launch.autotune import (ENCOUNTER_BLOCK_D_CANDIDATES,
+                                   ENCOUNTER_BLOCK_M_CANDIDATES,
+                                   MULE_AGG_BLOCK_D_CANDIDATES,
+                                   VMEM_BUDGET_BYTES, analyze_engine_step,
+                                   encounter_tile_bytes, mule_agg_tile_bytes,
+                                   tuned_block_d, tuned_encounter_blocks,
+                                   tuning_cache_clear)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    # the lookup memoizes the default-resolution cache; tests repoint
+    # REPRO_TUNE_CACHE, so drop the memo on both sides of every test
+    tuning_cache_clear()
+    yield
+    tuning_cache_clear()
+
+
+def _write_cache(path, tuned):
+    path.write_text(json.dumps(
+        {"bench": "autotune.run_roofline", "config": {}, "roofline": [],
+         "tuned": tuned, "tuned_speedup_vs_default": 1.0}))
+
+
+# ---------------------------------------------------------------------------
+# tuning-cache lookup
+# ---------------------------------------------------------------------------
+
+
+def test_cache_lookup_nearest_shape(tmp_path, monkeypatch):
+    cache = tmp_path / "cache.json"
+    _write_cache(cache, {
+        "mule_agg": [{"f": 8, "m": 64, "d": 4096, "block_d": 512},
+                     {"f": 8, "m": 64, "d": 65536, "block_d": 2048}],
+        "encounter_mix": [
+            {"m": 512, "d": 480, "block_m": 128, "block_d": 256},
+            {"m": 4096, "d": 480, "block_m": 512, "block_d": 1024}]})
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+    tuning_cache_clear()
+    assert tuned_block_d(4000) == 512          # nearest |log d ratio|
+    assert tuned_block_d(1 << 17) == 2048
+    assert tuned_encounter_blocks(600, 480) == (128, 256)
+    assert tuned_encounter_blocks(3000, 480) == (512, 1024)
+
+
+def test_cache_env_empty_disables(monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", "")
+    tuning_cache_clear()
+    assert tuned_block_d(1 << 18) == autotune.MULE_AGG_DEFAULT_BLOCK_D
+    assert tuned_encounter_blocks(1024, 480) == \
+        autotune.ENCOUNTER_DEFAULT_BLOCKS
+
+
+def test_cache_missing_or_malformed_falls_back(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "absent.json"))
+    tuning_cache_clear()
+    assert tuned_block_d(4096) == autotune.MULE_AGG_DEFAULT_BLOCK_D
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(bad))
+    tuning_cache_clear()
+    assert tuned_encounter_blocks(64, 64) == \
+        autotune.ENCOUNTER_DEFAULT_BLOCKS
+    # schema-valid JSON without a tuned section reads as "no cache" too
+    bad.write_text(json.dumps({"tuned": "oops"}))
+    tuning_cache_clear()
+    assert tuned_block_d(4096) == autotune.MULE_AGG_DEFAULT_BLOCK_D
+
+
+def test_committed_cache_drives_the_kernels():
+    """The repo's own BENCH_roofline.json is what pick_block_d and the
+    encounter wrapper consult by default."""
+    from repro.kernels.mule_agg.ops import pick_block_d
+    cache = autotune.load_tuning_cache()
+    assert cache is not None, "committed BENCH_roofline.json must parse"
+    entry = cache["tuned"]["mule_agg"][-1]
+    assert pick_block_d(entry["d"]) == entry["block_d"]
+    em = cache["tuned"]["encounter_mix"][0]
+    assert tuned_encounter_blocks(em["m"], em["d"]) == \
+        (em["block_m"], em["block_d"])
+
+
+def test_explicit_block_beats_cache(tmp_path, monkeypatch):
+    from repro.kernels.mule_agg.ops import mule_agg, pick_block_d
+    cache = tmp_path / "cache.json"
+    _write_cache(cache, {"mule_agg": [{"f": 2, "m": 8, "d": 256,
+                                       "block_d": 256}],
+                         "encounter_mix": []})
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+    tuning_cache_clear()
+    assert pick_block_d(256) == 256
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.uniform(k1, (2, 8))
+    w = jax.random.normal(k2, (8, 256))
+    ref = np.asarray(mule_agg(a, w, backend="ref"))
+    out = np.asarray(mule_agg(a, w, block_d=128, interpret=True))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# differential numerics: tuning may move blocks, results must not move
+# ---------------------------------------------------------------------------
+
+
+def test_mule_agg_bitwise_identical_across_candidates():
+    f, m, d = 4, 24, 1000                      # d indivisible by every block
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    assign = jax.random.uniform(k1, (f, m))
+    w = jax.random.normal(k2, (m, d))
+    from repro.kernels.mule_agg.kernel import mule_agg_pallas
+    from repro.kernels.mule_agg.ref import mule_agg_reference
+    blocks = sorted({min(b, max(128, d)) for b in MULE_AGG_BLOCK_D_CANDIDATES
+                     if mule_agg_tile_bytes(f, m, min(b, max(128, d)))
+                     <= VMEM_BUDGET_BYTES})
+    assert len(blocks) >= 3                    # a real sweep, not one cell
+    outs = [np.asarray(mule_agg_pallas(assign, w, block_d=b, interpret=True))
+            for b in blocks]
+    for b, o in zip(blocks[1:], outs[1:]):
+        assert np.array_equal(outs[0], o), f"block_d={b} changed the output"
+    np.testing.assert_allclose(
+        outs[0], np.asarray(mule_agg_reference(assign, w)),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_encounter_mix_bitwise_identical_across_candidates():
+    # M divides every block_m candidate so the padded contraction length is
+    # the same for all tiles (block_m changes it otherwise, and a different
+    # reduction length is not bitwise-stable on CPU — see the padded test
+    # below); D stays indivisible to exercise column padding
+    m, d = 512, 520
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    pos = jax.random.uniform(ks[0], (m, 2))
+    area = jax.random.randint(ks[1], (m,), 0, 2)
+    active = jax.random.uniform(ks[2], (m,)) < 0.9
+    w = jax.random.normal(ks[3], (m, d))
+    from repro.kernels.encounter_mix.kernel import encounter_mix_pallas
+    from repro.kernels.encounter_mix.ref import encounter_mix_reference
+    pairs = sorted({(min(bm, max(8, m)), min(bd, max(128, d)))
+                    for bm in ENCOUNTER_BLOCK_M_CANDIDATES
+                    for bd in ENCOUNTER_BLOCK_D_CANDIDATES
+                    if encounter_tile_bytes(m, min(bm, max(8, m)),
+                                            min(bd, max(128, d)))
+                    <= VMEM_BUDGET_BYTES})
+    assert len(pairs) >= 4
+    outs = []
+    for bm, bd in pairs:
+        mix, mass = encounter_mix_pallas(pos, area, active, w, radius=0.12,
+                                         block_m=bm, block_d=bd,
+                                         interpret=True)
+        outs.append((np.asarray(mix), np.asarray(mass)))
+    for (bm, bd), (mix, mass) in zip(pairs[1:], outs[1:]):
+        assert np.array_equal(outs[0][0], mix), \
+            f"blocks ({bm},{bd}) changed the mix"
+        assert np.array_equal(outs[0][1], mass), \
+            f"blocks ({bm},{bd}) changed the mass"
+    ref_mix, ref_mass = encounter_mix_reference(pos, area, active, w,
+                                                radius=0.12)
+    np.testing.assert_allclose(outs[0][1], np.asarray(ref_mass),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(outs[0][0], np.asarray(ref_mix),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_encounter_mix_padded_rows_still_exact_vs_reference():
+    # when block_m does NOT divide M the zero-padded contraction length
+    # differs per candidate — bitwise identity is then out of reach on CPU
+    # (reduction order), but every candidate must still match the oracle
+    m, d = 300, 520
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    pos = jax.random.uniform(ks[0], (m, 2))
+    area = jax.random.randint(ks[1], (m,), 0, 2)
+    active = jax.random.uniform(ks[2], (m,)) < 0.9
+    w = jax.random.normal(ks[3], (m, d))
+    from repro.kernels.encounter_mix.kernel import encounter_mix_pallas
+    from repro.kernels.encounter_mix.ref import encounter_mix_reference
+    ref_mix, ref_mass = encounter_mix_reference(pos, area, active, w,
+                                                radius=0.12)
+    for bm in (128, 256, 300):
+        mix, mass = encounter_mix_pallas(pos, area, active, w, radius=0.12,
+                                         block_m=bm, block_d=256,
+                                         interpret=True)
+        np.testing.assert_allclose(np.asarray(mass), np.asarray(ref_mass),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(mix), np.asarray(ref_mix),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_tile_models_fit_the_budget():
+    # every default-shape candidate the tuner sweeps must be VMEM-feasible
+    for b in MULE_AGG_BLOCK_D_CANDIDATES:
+        assert mule_agg_tile_bytes(8, 64, b) <= VMEM_BUDGET_BYTES
+    assert encounter_tile_bytes(2048, 256, 1024) <= VMEM_BUDGET_BYTES
+    # and the model is monotone in each tile dim
+    assert mule_agg_tile_bytes(8, 64, 512) < mule_agg_tile_bytes(8, 64, 1024)
+    assert encounter_tile_bytes(512, 128, 256) < \
+        encounter_tile_bytes(512, 256, 256)
+
+
+# ---------------------------------------------------------------------------
+# engine roofline + artifact production
+# ---------------------------------------------------------------------------
+
+
+def test_analyze_engine_step_terms():
+    row = analyze_engine_step("mlmule", n_mules=8, steps=6)
+    assert row["method"] == "mlmule"
+    assert row["mesh"] == "1" and row["chips"] == 1
+    assert row["flops_per_device"] > 0
+    assert row["bytes_per_device"] > 0
+    assert row["coll_bytes_per_device"] == 0   # single host: no collectives
+    assert row["dominant"] in ("compute", "memory", "collective")
+    assert row["t_memory_us_per_step"] == pytest.approx(
+        row["t_memory_s"] / 6 * 1e6)
+
+
+def test_run_roofline_artifact_validates(tmp_path):
+    """A freshly produced artifact satisfies the bench_gate schema and
+    round-trips through the regression gate against itself."""
+    from benchmarks import bench_gate
+    out = tmp_path / "BENCH_roofline.json"
+    payload = autotune.run_roofline(
+        str(out), reps=1, steps=4, mule_counts=(8,), methods=("local",),
+        mule_agg_shapes=((2, 8, 512),), encounter_shapes=((64, 96),))
+    schema = bench_gate.validate("BENCH_roofline.json", payload)
+    assert schema.headline == "tuned_speedup_vs_default"
+    on_disk = json.loads(out.read_text())
+    assert on_disk["tuned_speedup_vs_default"] == \
+        payload["tuned_speedup_vs_default"]
+    rows = on_disk["roofline"]
+    assert [r["method"] for r in rows] == ["local"]
+    assert rows[0]["n_mules"] == 8
+    # the gate passes an artifact against itself, always
+    assert bench_gate.gate_artifact("BENCH_roofline.json",
+                                    on_disk, payload).ok
+
+
+def test_tune_handles_tiny_shapes():
+    # candidates clamp exactly like the kernels; a shape smaller than every
+    # candidate must still tune (regression: empty-candidate crash)
+    r = autotune.tune_mule_agg(2, 8, 64, reps=1)
+    assert r["block_d"] == 128                 # max(128, d=64)
+    e = autotune.tune_encounter_mix(16, 32, reps=1)
+    assert (e["block_m"], e["block_d"]) == (16, 128)
+    assert e["speedup_vs_default"] >= 0

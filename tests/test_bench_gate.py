@@ -1,0 +1,244 @@
+"""Gate self-test: the perf ratchet must be proven to trip before CI
+trusts it. Synthetic artifacts pin fail/pass/raise behaviour for every
+branch of ``benchmarks.bench_gate``; the committed artifacts themselves are
+schema-validated here too (the tier-1 half of the gate)."""
+import json
+
+import pytest
+
+from benchmarks import bench_gate
+from benchmarks.bench_gate import (ARTIFACTS, GateSchemaError, check_committed,
+                                   gate_all, gate_artifact, validate)
+
+_PROTO = {float: 1.0, int: 0, bool: True, list: [], dict: {}}
+
+
+def _payload(name, headline=None, **overrides):
+    """Minimal schema-valid artifact for one family."""
+    schema = ARTIFACTS[name]
+    p = {"bench": schema.bench, "config": {"backend": "cpu"}}
+    for key, typ in schema.required.items():
+        p[key] = _PROTO[typ]
+    if headline is not None:
+        p[schema.headline] = headline
+    p.update(overrides)
+    return p
+
+
+def _write_all(directory, headlines=None):
+    headlines = headlines or {}
+    for name in ARTIFACTS:
+        (directory / name).write_text(
+            json.dumps(_payload(name, headline=headlines.get(name))))
+
+
+# ---------------------------------------------------------------------------
+# regression gating: fail / pass / direction / slack
+# ---------------------------------------------------------------------------
+
+
+def test_regression_trips():
+    base = _payload("BENCH_sweep.json", headline=6.5)
+    fresh = _payload("BENCH_sweep.json", headline=5.0)     # -23% > 10%
+    r = gate_artifact("BENCH_sweep.json", base, fresh)
+    assert not r.ok
+    assert "dropped" in r.reason
+    assert "FAIL" in r.row()
+
+
+def test_within_threshold_passes():
+    base = _payload("BENCH_sweep.json", headline=6.5)
+    fresh = _payload("BENCH_sweep.json", headline=6.0)     # -7.7% < 10%
+    r = gate_artifact("BENCH_sweep.json", base, fresh)
+    assert r.ok
+
+
+def test_improvement_always_passes():
+    base = _payload("BENCH_encounter.json", headline=1.8)
+    fresh = _payload("BENCH_encounter.json", headline=9.9)
+    r = gate_artifact("BENCH_encounter.json", base, fresh)
+    assert r.ok
+    assert "improved or held" in r.reason
+
+
+def test_unchanged_passes():
+    base = _payload("BENCH_distributed.json", headline=5.9)
+    assert gate_artifact("BENCH_distributed.json", base, dict(base)).ok
+
+
+def test_lower_is_better_direction():
+    # churn overhead: RISING is the regression
+    base = _payload("BENCH_churn.json", headline=5.0)
+    worse = _payload("BENCH_churn.json", headline=9.0)     # > 5*1.1 + 2.0
+    better = _payload("BENCH_churn.json", headline=1.0)
+    assert not gate_artifact("BENCH_churn.json", base, worse).ok
+    assert gate_artifact("BENCH_churn.json", base, better).ok
+
+
+def test_abs_slack_shields_near_zero_metrics():
+    # 10% of a 0.2% overhead is pure noise; the 2-point absolute slack
+    # means only a real rise (past ~2.2) trips
+    base = _payload("BENCH_churn.json", headline=0.2)
+    noisy = _payload("BENCH_churn.json", headline=2.0)
+    real = _payload("BENCH_churn.json", headline=3.0)
+    assert gate_artifact("BENCH_churn.json", base, noisy).ok
+    assert not gate_artifact("BENCH_churn.json", base, real).ok
+
+
+def test_roofline_slack_around_unity():
+    # tuned_speedup_vs_default sits near 1.0 when the defaults are already
+    # optimal; 0.05 absolute slack keeps jitter out, a real drop still trips
+    base = _payload("BENCH_roofline.json", headline=1.0)
+    jitter = _payload("BENCH_roofline.json", headline=0.93)
+    real = _payload("BENCH_roofline.json", headline=0.8)
+    assert gate_artifact("BENCH_roofline.json", base, jitter).ok
+    assert not gate_artifact("BENCH_roofline.json", base, real).ok
+
+
+def test_threshold_is_configurable():
+    base = _payload("BENCH_sweep.json", headline=10.0)
+    fresh = _payload("BENCH_sweep.json", headline=8.0)
+    assert not gate_artifact("BENCH_sweep.json", base, fresh, threshold=0.1).ok
+    assert gate_artifact("BENCH_sweep.json", base, fresh, threshold=0.25).ok
+
+
+# ---------------------------------------------------------------------------
+# schema validation: raise on anything malformed
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_artifact_raises():
+    with pytest.raises(GateSchemaError, match="unknown artifact"):
+        validate("BENCH_nope.json", {})
+
+
+def test_non_dict_payload_raises():
+    with pytest.raises(GateSchemaError, match="not an object"):
+        validate("BENCH_sweep.json", [1, 2, 3])
+
+
+def test_wrong_bench_entry_point_raises():
+    p = _payload("BENCH_sweep.json", bench="engine_micro.run_churn_bench")
+    with pytest.raises(GateSchemaError, match="bench="):
+        validate("BENCH_sweep.json", p)
+
+
+def test_missing_required_key_raises():
+    p = _payload("BENCH_sweep.json")
+    del p["speedup_vs_sequential"]
+    with pytest.raises(GateSchemaError, match="speedup_vs_sequential"):
+        validate("BENCH_sweep.json", p)
+
+
+def test_missing_config_raises():
+    p = _payload("BENCH_sweep.json")
+    del p["config"]
+    with pytest.raises(GateSchemaError, match="config"):
+        validate("BENCH_sweep.json", p)
+
+
+def test_mistyped_value_raises():
+    p = _payload("BENCH_sweep.json", headline="fast")
+    with pytest.raises(GateSchemaError, match="expected float"):
+        validate("BENCH_sweep.json", p)
+
+
+def test_bool_is_not_a_number():
+    # json.load never yields bool for a number, but a buggy producer can:
+    # True must not satisfy an int/float key (bool is an int subclass)
+    p = _payload("BENCH_sweep.json", retraces_second_call=True)
+    with pytest.raises(GateSchemaError, match="retraces_second_call"):
+        validate("BENCH_sweep.json", p)
+
+
+def test_gate_validates_both_sides():
+    good = _payload("BENCH_sweep.json", headline=6.0)
+    bad = _payload("BENCH_sweep.json")
+    del bad["vmapped_warm_s"]
+    with pytest.raises(GateSchemaError):
+        gate_artifact("BENCH_sweep.json", bad, good)
+    with pytest.raises(GateSchemaError):
+        gate_artifact("BENCH_sweep.json", good, bad)
+
+
+# ---------------------------------------------------------------------------
+# committed artifacts: the tier-1 acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+def test_committed_artifacts_validate():
+    """Every committed BENCH_*.json — including BENCH_roofline.json —
+    parses and matches its schema; this is what tier-1 CI runs."""
+    assert check_committed() == sorted(ARTIFACTS)
+
+
+def test_every_headline_is_a_required_key():
+    for name, schema in ARTIFACTS.items():
+        assert schema.headline in schema.required, name
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes are the CI contract (0 pass, 1 regression, 2 schema)
+# ---------------------------------------------------------------------------
+
+
+def test_cli_check_committed_exits_zero(capsys):
+    assert bench_gate.main(["--check-committed"]) == 0
+    out = capsys.readouterr().out
+    assert "BENCH_roofline.json" in out
+
+
+def test_cli_gate_pass_and_regression(tmp_path, capsys):
+    baseline, fresh = tmp_path / "base", tmp_path / "fresh"
+    baseline.mkdir(), fresh.mkdir()
+    _write_all(baseline, {"BENCH_sweep.json": 6.5})
+    _write_all(fresh, {"BENCH_sweep.json": 6.4})
+    argv = ["--baseline", str(baseline), "--fresh", str(fresh)]
+    assert bench_gate.main(argv) == 0
+    _write_all(fresh, {"BENCH_sweep.json": 3.0})           # regress
+    assert bench_gate.main(argv) == 1
+    captured = capsys.readouterr()
+    assert "FAIL" in captured.out
+    assert "ratchet" in captured.err
+
+
+def test_cli_single_artifact_filter(tmp_path):
+    baseline, fresh = tmp_path / "base", tmp_path / "fresh"
+    baseline.mkdir(), fresh.mkdir()
+    _write_all(baseline, {"BENCH_sweep.json": 6.5})
+    _write_all(fresh, {"BENCH_sweep.json": 3.0})
+    argv = ["--baseline", str(baseline), "--fresh", str(fresh)]
+    # gating only the un-regressed artifact passes; the regressed one fails
+    assert bench_gate.main(argv + ["--artifact", "BENCH_churn.json"]) == 0
+    assert bench_gate.main(argv + ["--artifact", "BENCH_sweep.json"]) == 1
+
+
+def test_cli_schema_error_exits_two(tmp_path, capsys):
+    baseline, fresh = tmp_path / "base", tmp_path / "fresh"
+    baseline.mkdir(), fresh.mkdir()
+    _write_all(baseline)
+    _write_all(fresh)
+    (fresh / "BENCH_sweep.json").write_text("{truncated")
+    assert bench_gate.main(["--baseline", str(baseline),
+                            "--fresh", str(fresh)]) == 2
+    assert "SCHEMA ERROR" in capsys.readouterr().err
+
+
+def test_cli_missing_artifact_exits_two(tmp_path):
+    baseline, fresh = tmp_path / "base", tmp_path / "fresh"
+    baseline.mkdir(), fresh.mkdir()
+    _write_all(baseline)
+    _write_all(fresh)
+    (fresh / "BENCH_distributed.json").unlink()
+    assert bench_gate.main(["--baseline", str(baseline),
+                            "--fresh", str(fresh)]) == 2
+
+
+def test_gate_all_reports_every_artifact(tmp_path):
+    baseline, fresh = tmp_path / "base", tmp_path / "fresh"
+    baseline.mkdir(), fresh.mkdir()
+    _write_all(baseline)
+    _write_all(fresh)
+    results = gate_all(str(baseline), str(fresh))
+    assert [r.name for r in results] == sorted(ARTIFACTS)
+    assert all(r.ok for r in results)

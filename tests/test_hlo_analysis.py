@@ -2,7 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.launch.dtypes import DTYPE_BYTES, UnknownDtypeError, dtype_bytes
 from repro.launch.hlo_analysis import analyze_hlo
 
 
@@ -65,3 +67,47 @@ def test_collectives_empty_on_single_device():
     a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     r = _flops_of(lambda a: a @ a, a)
     assert r.coll_bytes == 0
+
+
+_UNKNOWN_DTYPE_HLO = """\
+HloModule bogus
+
+ENTRY %main (p0: f9z99[32,32]) -> f9z99[32,32] {
+  %p0 = f9z99[32,32]{1,0} parameter(0)
+  ROOT %c = f9z99[32,32]{1,0} copy(%p0)
+}
+"""
+
+
+def test_unknown_dtype_raises():
+    """The silent ``.get(dtype, 4)`` fallback is gone: a dtype missing from
+    the shared table must raise, naming the dtype — in both parsers."""
+    from repro.launch.roofline import collective_bytes
+
+    with pytest.raises(UnknownDtypeError, match="f9z99"):
+        analyze_hlo(_UNKNOWN_DTYPE_HLO)
+    bad_coll = ("ENTRY %e (p: f9z99[8]) -> f9z99[8] {\n"
+                "  %p = f9z99[8]{0} parameter(0)\n"
+                "  ROOT %ar = f9z99[8]{0} all-reduce(%p), replica_groups={}\n"
+                "}\n")
+    with pytest.raises(UnknownDtypeError, match="f9z99"):
+        collective_bytes(bad_coll)
+
+
+def test_unknown_dtype_collected():
+    """``collect`` mode records unknowns (costed f32) instead of raising."""
+    seen = set()
+    assert dtype_bytes("f9z99", collect=seen) == 4
+    assert dtype_bytes("f32", collect=seen) == 4
+    assert seen == {"f9z99"}
+
+
+def test_shared_dtype_table_is_single_source():
+    """Both analyzers price shapes through the one shared table."""
+    import repro.launch.hlo_analysis as ha
+    import repro.launch.roofline as rl
+
+    assert not hasattr(ha, "_DTYPE_BYTES")
+    assert not hasattr(rl, "_DTYPE_BYTES")
+    assert ha._shape_bytes("bf16[4,8]") == 4 * 8 * DTYPE_BYTES["bf16"]
+    assert rl._shape_bytes("bf16", "4,8") == 4 * 8 * DTYPE_BYTES["bf16"]

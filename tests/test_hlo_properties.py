@@ -1,0 +1,154 @@
+"""Property tests for the scan-aware HLO parsers: generated dot / conv /
+collective / while snippets with analytically known FLOPs, bytes and trip
+counts must round-trip through ``hlo_analysis.analyze_hlo`` EXACTLY — the
+analyzer's regexes are pinned against the HLO text grammar here, not
+against whatever today's XLA happens to emit."""
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # tier-1 container: fixed-seed sweep
+    from repro.testing.hypo import given, settings, strategies as st
+
+from repro.launch.dtypes import DTYPE_BYTES
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import collective_bytes
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# every sized dtype the shared table knows (token is unsized, no array shape)
+_SIZED_DTYPES = sorted(d for d, b in DTYPE_BYTES.items() if b > 0)
+
+
+def _dot_module(m, k, n):
+    return f"""HloModule dot
+
+ENTRY %main (a: f32[{m},{k}], b: f32[{k},{n}]) -> f32[{m},{n}] {{
+  %a = f32[{m},{k}]{{1,0}} parameter(0)
+  %b = f32[{k},{n}]{{1,0}} parameter(1)
+  ROOT %d = f32[{m},{n}]{{1,0}} dot(%a, %b), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+}}
+"""
+
+
+def _conv_module(h, w, kh, kw, cin, cout):
+    oh, ow = h - kh + 1, w - kw + 1
+    return f"""HloModule conv
+
+ENTRY %main (in: f32[1,{h},{w},{cin}], kern: f32[{kh},{kw},{cin},{cout}]) -> f32[1,{oh},{ow},{cout}] {{
+  %in = f32[1,{h},{w},{cin}]{{3,2,1,0}} parameter(0)
+  %kern = f32[{kh},{kw},{cin},{cout}]{{3,2,1,0}} parameter(1)
+  ROOT %conv = f32[1,{oh},{ow},{cout}]{{3,2,1,0}} convolution(%in, %kern), window={{size={kh}x{kw}}}, dim_labels=b01f_01io->b01f
+}}
+"""
+
+
+def _coll_module(kind, n):
+    attr = ("source_target_pairs={{0,1}},{{1,0}}"
+            if kind == "collective-permute" else "replica_groups={}")
+    return f"""HloModule coll
+
+ENTRY %main (p: f32[{n}]) -> f32[{n}] {{
+  %p = f32[{n}]{{0}} parameter(0)
+  ROOT %c = f32[{n}]{{0}} {kind}(%p), {attr}
+}}
+"""
+
+
+def _while_module(n, trip, body_extra=""):
+    """Counted loop: body does one [n,n]x[n,n] dot per iteration."""
+    state = f"(s32[], f32[{n},{n}])"
+    return f"""HloModule loop
+
+%body (prev: {state}) -> {state} {{
+  %prev = {state} parameter(0)
+  %i = s32[] get-tuple-element(%prev), index=0
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  %x = f32[{n},{n}]{{1,0}} get-tuple-element(%prev), index=1
+  %d = f32[{n},{n}]{{1,0}} dot(%x, %x), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+{body_extra}  ROOT %t = {state} tuple(%ni, %d)
+}}
+
+%cond (cp: {state}) -> pred[] {{
+  %cp = {state} parameter(0)
+  %ci = s32[] get-tuple-element(%cp), index=0
+  %limit = s32[] constant({trip})
+  ROOT %lt = pred[] compare(%ci, %limit), direction=LT
+}}
+
+ENTRY %main (x0: f32[{n},{n}]) -> {state} {{
+  %x0 = f32[{n},{n}]{{1,0}} parameter(0)
+  %zero = s32[] constant(0)
+  %init = {state} tuple(%zero, %x0)
+  ROOT %w = {state} while(%init), condition=%cond, body=%body
+}}
+"""
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96))
+def test_dot_flops_and_bytes_exact(m, k, n):
+    r = analyze_hlo(_dot_module(m, k, n))
+    assert r.flops == 2 * m * k * n
+    # result + both operands, f32
+    assert r.bytes == 4 * (m * n + m * k + k * n)
+    assert r.coll_bytes == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(h=st.integers(4, 12), w=st.integers(4, 12),
+       kh=st.integers(1, 3), kw=st.integers(1, 3),
+       cin=st.integers(1, 8), cout=st.integers(1, 8))
+def test_conv_flops_exact(h, w, kh, kw, cin, cout):
+    oh, ow = h - kh + 1, w - kw + 1
+    r = analyze_hlo(_conv_module(h, w, kh, kw, cin, cout))
+    # 2 * output elements * kernel MACs per output element
+    assert r.flops == 2 * (oh * ow * cout) * (kh * kw * cin)
+    assert r.bytes == 4 * (oh * ow * cout + h * w * cin
+                           + kh * kw * cin * cout)
+
+
+@settings(max_examples=30, deadline=None)
+@given(kind=st.sampled_from(_COLLECTIVES), n=st.integers(1, 4096))
+def test_collective_bytes_exact(kind, n):
+    hlo = _coll_module(kind, n)
+    r = analyze_hlo(hlo)
+    assert r.coll[kind] == 4 * n             # operand bytes, resolved via sym
+    assert r.coll_bytes == 4 * n
+    assert r.bytes == 8 * n                  # result + operand
+    assert r.flops == 0
+    # the roofline-side parser agrees on the wire bytes
+    assert collective_bytes(hlo)[kind] == 4 * n
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 24), trip=st.integers(1, 200))
+def test_while_trip_count_multiplies_exactly(n, trip):
+    r = analyze_hlo(_while_module(n, trip))
+    assert r.flops == trip * 2 * n ** 3
+    # per iteration: add result (4) + dot result/operands (12 n^2 bytes)
+    assert r.bytes == trip * (4 + 12 * n * n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 24), trip=st.integers(1, 100))
+def test_while_multiplies_collectives_too(n, trip):
+    extra = (f"  %ar = f32[{n},{n}]{{1,0}} all-reduce(%d), "
+             "replica_groups={}\n")
+    r = analyze_hlo(_while_module(n, trip, body_extra=extra))
+    assert r.coll["all-reduce"] == trip * 4 * n * n
+    assert r.flops == trip * 2 * n ** 3
+
+
+@settings(max_examples=30, deadline=None)
+@given(dtype=st.sampled_from(_SIZED_DTYPES), n=st.integers(1, 1024))
+def test_every_known_dtype_prices_exactly(dtype, n):
+    hlo = f"""HloModule dt
+
+ENTRY %main (p: {dtype}[{n}]) -> {dtype}[{n}] {{
+  %p = {dtype}[{n}]{{0}} parameter(0)
+  ROOT %c = {dtype}[{n}]{{0}} copy(%p)
+}}
+"""
+    r = analyze_hlo(hlo)
+    # copy counts result + operand through the one shared dtype table
+    assert r.bytes == 2 * n * DTYPE_BYTES[dtype]
