@@ -60,10 +60,15 @@ class ArtifactSchema:
     headline: str                     # the ratcheted metric (in ``required``)
     higher_is_better: bool            # regression direction
     abs_slack: float = 0.0            # additive tolerance for near-zero metrics
+    # additional ratcheted metrics: (key, higher_is_better, abs_slack) each,
+    # gated with the same threshold as the headline — an artifact fails if
+    # ANY gated metric regresses (the headline still fills the result row)
+    extra_headlines: Tuple[Tuple[str, bool, float], ...] = ()
 
     def describe(self) -> str:
         arrow = "higher" if self.higher_is_better else "lower"
-        return f"headline={self.headline} ({arrow} is better)"
+        extras = "".join(f" +{k}" for k, _, _ in self.extra_headlines)
+        return f"headline={self.headline} ({arrow} is better){extras}"
 
 
 ARTIFACTS: Dict[str, ArtifactSchema] = {
@@ -92,8 +97,17 @@ ARTIFACTS: Dict[str, ArtifactSchema] = {
         bench="engine_micro.run_encounter_bench",
         required={"dense_warm_s": float, "tiled_warm_s": float,
                   "speedup_tiled_vs_dense": float, "host_gossip_warm_s": float,
-                  "ring_gossip_warm_s": float, "ring_vs_host": float},
-        headline="speedup_tiled_vs_dense", higher_is_better=True),
+                  "ring_gossip_warm_s": float, "ring_vs_host": float,
+                  "ring_unpruned_warm_s": float,
+                  "ring_vs_host_unpruned": float,
+                  "hops_executed": int, "hops_pruned": int,
+                  "payload_bytes_per_exchange": float,
+                  "bucket_locality_fraction": float},
+        headline="speedup_tiled_vs_dense", higher_is_better=True,
+        # the locality-aware ring ratchets alongside the tiled kernel: the
+        # bench runs both the pruned and unpruned ring variants and this
+        # gates the pruned ring's speedup over the single-host path
+        extra_headlines=(("ring_vs_host", True, 0.0),)),
     "BENCH_roofline.json": ArtifactSchema(
         bench="autotune.run_roofline",
         required={"roofline": list, "tuned": dict,
@@ -173,21 +187,36 @@ def gate_artifact(name: str, baseline: Dict, fresh: Dict,
 
     - higher-is-better: ``fresh >= baseline * (1 - threshold) - abs_slack``
     - lower-is-better:  ``fresh <= baseline * (1 + threshold) + abs_slack``
+
+    ``extra_headlines`` gate with the same rule; the result's numeric
+    fields always report the primary headline, but ``ok`` requires every
+    gated metric to hold and the reason names the first regressed one.
     """
     schema = validate(name, baseline)
     validate(name, fresh)
-    b = float(baseline[schema.headline])
-    f = float(fresh[schema.headline])
-    if schema.higher_is_better:
-        floor = b * (1.0 - threshold) - schema.abs_slack
-        ok = f >= floor
-        reason = ("improved or held" if f >= b else
-                  f"dropped {(1 - f / b) * 100:.1f}%" if b else "dropped")
-    else:
-        floor = b * (1.0 + threshold) + schema.abs_slack
-        ok = f <= floor
-        reason = ("improved or held" if f <= b else
-                  f"rose {(f - b):.4g}")
+
+    def one(key, higher, slack):
+        b = float(baseline[key])
+        f = float(fresh[key])
+        if higher:
+            floor = b * (1.0 - threshold) - slack
+            ok = f >= floor
+            reason = ("improved or held" if f >= b else
+                      f"dropped {(1 - f / b) * 100:.1f}%" if b else "dropped")
+        else:
+            floor = b * (1.0 + threshold) + slack
+            ok = f <= floor
+            reason = ("improved or held" if f <= b else
+                      f"rose {(f - b):.4g}")
+        return b, f, floor, ok, reason
+
+    b, f, floor, ok, reason = one(schema.headline, schema.higher_is_better,
+                                  schema.abs_slack)
+    for key, higher, slack in schema.extra_headlines:
+        _, xf, xfloor, xok, xreason = one(key, higher, slack)
+        if ok and not xok:
+            reason = f"{key} {xreason} ({xf:.4g}, limit {xfloor:.4g})"
+        ok = ok and xok
     return GateResult(name=name, ok=ok, headline=schema.headline,
                       baseline=b, fresh=f, floor=floor, reason=reason)
 

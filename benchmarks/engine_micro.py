@@ -339,11 +339,12 @@ def _respawn_with_devices(n_devices: int, out_path: str,
 
 
 def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
-                        n_devices: int = 8, ring_mules: int = 64,
-                        ring_steps: int = 90,
+                        n_devices: int = 8, ring_mules: int = 8192,
+                        ring_steps: int = 9, ring_areas: int = 8,
                         out_path: str = _DEFAULT_ENC_OUT):
-    """Peer-encounter mix: tiled kernel vs the retired dense path, plus a
-    ring-sharded vs single-host warm gossip replay.
+    """Peer-encounter mix: tiled kernel vs the retired dense path, plus the
+    locality-aware ring (pruned AND unpruned) vs a single-host warm gossip
+    replay at the same M=8192.
 
     The dense path builds the full [M, M] encounter matrix, normalizes it,
     and runs one ``masked_group_mean`` matmul *per model leaf* — O(M^2)
@@ -354,19 +355,32 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
     warm step beats the dense warm step and records both in
     ``BENCH_encounter.json``.
 
-    The ring rows replay the same gossip workload single-host vs sharded
-    over a (2, n/2) mesh (``ppermute`` neighbor streaming); on forced host
-    devices the ring's rendezvous cost usually outweighs the sharding win
-    — the row tracks the overhead honestly, it is not asserted. Needs
-    ``n_devices``; without them the bench re-execs itself like
-    ``run_distributed_bench``.
+    The ring rows replay one gossip workload three ways: single-host, the
+    bucket-sharded pruned ring (``DistributedConfig.ring_prune=True``, the
+    engine default), and the same ring with pruning off (every hop streams
+    every block — the pre-locality behaviour). Mules carry ``ring_areas``
+    balanced random areas and are ordered by ``bucket_mule_order`` before
+    sharding, so the area-bitmask predicate can prove remote hops empty;
+    the recorded telemetry (hops executed/pruned per exchange step, payload
+    bytes per exchange, bucket-locality fraction) makes a future regression
+    diagnosable. ``ring_vs_host`` — the pruned ring's speedup — is gated by
+    ``bench_gate`` alongside the tiled-kernel headline; both ring variants
+    must agree bitwise (asserted here, and pinned with scenario coverage in
+    ``tests/test_ring_exchange.py``). Needs ``n_devices``; without them the
+    bench re-execs itself like ``run_distributed_bench``.
     """
+    import dataclasses
+
     import numpy as np
     from repro.baselines.gossip import (encounter_matrix,
-                                        flatten_population,
+                                        flatten_population, ring_hop_mask,
                                         unflatten_population)
     from repro.core.aggregation import masked_group_mean
     from repro.core.distributed import (DistributedConfig,
+                                        bucket_locality_fraction,
+                                        bucket_mule_order,
+                                        reorder_colocation,
+                                        reorder_mule_state,
                                         to_distributed_state)
     from repro.kernels.encounter_mix import encounter_mix
 
@@ -429,10 +443,25 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
         f"tiled encounter_mix ({fused_s:.3f}s) lost to the dense path " \
         f"({dense_s:.3f}s)"
 
-    # -- ring-sharded vs single-host warm gossip replay ----------------------
-    mesh = jax.make_mesh((2, n_devices // 2), ("pod", "data"))
+    # -- locality-aware ring vs single-host warm gossip replay ---------------
+    # same population scale as the kernel half: the regime the ROADMAP item
+    # names, where a ring hop moves a [M/n, D] block and locality decides
+    # whether it moves at all. Balanced random areas, bucket-ordered before
+    # sharding, so each shard is (nearly) one spatial bucket.
+    mesh = jax.make_mesh((1, n_devices), ("pod", "data"))
     rm, rt = ring_mules, ring_steps
-    X = jax.random.normal(jax.random.PRNGKey(50), (rm, 12, 8))
+    rd = 8                                            # per-mule model dim
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    r_area = np.asarray(jax.random.permutation(
+        ks[0], np.arange(rm) % ring_areas)).astype(np.int32)
+    co_ring = {
+        "fixed_id": np.full((rt, rm), -1, np.int32),  # peer exchange only
+        "exchange": np.zeros((rt, rm), bool),
+        "pos": np.asarray(jax.random.uniform(ks[1], (rt, rm, 2)),
+                          np.float32),
+        "area": r_area,
+    }
+    X = jax.random.normal(jax.random.PRNGKey(50), (rm, 12, rd))
     Y = jax.random.normal(jax.random.PRNGKey(60), (rm, 12))
 
     def train_fn(params, batch, key):
@@ -448,31 +477,72 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
 
     pcfg = PopulationConfig(mode="mobile", n_fixed=8, n_mules=rm)
     pop = init_population(jax.random.PRNGKey(1),
-                          lambda k: {"w": jax.random.normal(k, (8,))}, pcfg)
-    co = walk_colocation(0, rm, rt)
+                          lambda k: {"w": jax.random.normal(k, (rd,))}, pcfg)
+
+    # bucket sharding: order mules by area at colocation build time (state
+    # rows follow their columns); migrate_mules is the mid-run re-bucketing
+    # primitive this bench doesn't need (areas are static here)
+    order = bucket_mule_order(r_area)
+    co_ring = reorder_colocation(co_ring, order)
+    pop = reorder_mule_state(pop, order)
     key = jax.random.PRNGKey(7)
 
     def warm(fn):
-        _block(fn()[0])
+        out = fn()[0]
+        _block(out)
         t0 = time.perf_counter()
         _block(fn()[0])
-        return time.perf_counter() - t0
+        return time.perf_counter() - t0, out
 
-    host_s = warm(lambda: run_population(pop, co, batch_fn, train_fn, pcfg,
-                                         key, method="gossip"))
-    dcfg = DistributedConfig(pop=pcfg)
+    host_s, host_out = warm(lambda: run_population(
+        pop, co_ring, batch_fn, train_fn, pcfg, key, method="gossip"))
+    dcfg = DistributedConfig(pop=pcfg)                  # ring_prune=True
     dstate = to_distributed_state(pop, dcfg)
-    ring_s = warm(lambda: run_population_distributed(
-        dstate, co, batch_fn, train_fn, dcfg, mesh, key, method="gossip"))
+    ring_s, ring_out = warm(lambda: run_population_distributed(
+        dstate, co_ring, batch_fn, train_fn, dcfg, mesh, key,
+        method="gossip"))
+    dcfg_u = dataclasses.replace(dcfg, ring_prune=False)
+    unpruned_s, unpruned_out = warm(lambda: run_population_distributed(
+        to_distributed_state(pop, dcfg_u), co_ring, batch_fn, train_fn,
+        dcfg_u, mesh, key, method="gossip"))
+    for a, b in zip(jax.tree.leaves(ring_out["mule_models"]),
+                    jax.tree.leaves(unpruned_out["mule_models"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            "pruned and unpruned rings disagree"
+    del host_out
+
+    # -- ring telemetry (the host-side mirror of the in-ring predicate) ------
+    n_shards = int(mesh.shape["data"])
+    m_loc = rm // n_shards
+    need = np.asarray(ring_hop_mask(co_ring["area"], None, n_shards))
+    hops_executed = int(need.sum())
+    hops_pruned = n_shards - hops_executed
+    # per executed remote hop every shard sends its (pos f32[2] + area i32 +
+    # active bool + flat f32[D]) block; the predicate itself costs one
+    # [n, 32] f32 psum per exchange step
+    payload_bytes = (n_shards * max(hops_executed - 1, 0)
+                     * m_loc * (8 + 4 + 1 + 4 * rd)
+                     + n_shards * n_shards * 32 * 4)
+    locality = bucket_locality_fraction(co_ring["area"], n_shards)
 
     rows = [
         (f"encounter.dense_warm.M{m}", dense_s, "s (median)"),
         (f"encounter.tiled_warm.M{m}", fused_s, "s (median)"),
         (f"encounter.speedup.M{m}", dense_s / fused_s, "x (dense/tiled)"),
         (f"encounter.host_gossip_warm.M{rm}.T{rt}", host_s, "s total"),
-        (f"encounter.ring_gossip_warm.M{rm}.T{rt}", ring_s, "s total"),
+        (f"encounter.ring_gossip_warm.M{rm}.T{rt}", ring_s,
+         "s total (pruned)"),
+        (f"encounter.ring_unpruned_warm.M{rm}.T{rt}", unpruned_s,
+         "s total"),
         (f"encounter.ring_vs_host.M{rm}.T{rt}", host_s / ring_s,
-         "x (host/ring)"),
+         "x (host/pruned ring, gated)"),
+        (f"encounter.ring_vs_host_unpruned.M{rm}.T{rt}",
+         host_s / unpruned_s, "x (host/unpruned ring)"),
+        (f"encounter.hops.n{n_shards}", hops_executed,
+         f"executed per exchange step ({hops_pruned} pruned)"),
+        (f"encounter.payload_bytes", payload_bytes, "B per exchange step"),
+        (f"encounter.bucket_locality", locality,
+         "fraction of same-area pairs shard-local"),
     ]
     for name, val, derived in rows:
         print(f"{name},{val:.4f},{derived}")
@@ -483,6 +553,7 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
                    "n_leaves": len(jax.tree.leaves(models)),
                    "radius": radius, "reps": reps,
                    "ring_mules": rm, "ring_steps": rt,
+                   "ring_areas": ring_areas, "ring_model_d": rd,
                    "mesh": dict(mesh.shape),
                    "backend": jax.default_backend()},
         "dense_warm_s": round(dense_s, 4),
@@ -491,6 +562,12 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
         "host_gossip_warm_s": round(host_s, 4),
         "ring_gossip_warm_s": round(ring_s, 4),
         "ring_vs_host": round(host_s / ring_s, 2),
+        "ring_unpruned_warm_s": round(unpruned_s, 4),
+        "ring_vs_host_unpruned": round(host_s / unpruned_s, 2),
+        "hops_executed": hops_executed,
+        "hops_pruned": hops_pruned,
+        "payload_bytes_per_exchange": float(payload_bytes),
+        "bucket_locality_fraction": round(locality, 4),
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
@@ -505,14 +582,18 @@ def run_roofline_bench(n_devices: int = 8, out_path: str = _DEFAULT_ROOF_OUT,
 
     Runs ``repro.launch.autotune.run_roofline``: the compiled engine step
     is decomposed per (method × M) on the single-host engine and per
-    method on a (2, 4) mesh (collective terms), and every feasible
-    ``encounter_mix``/``mule_agg`` block-size candidate is measured on the
-    interpret path; the argmin selections land in the cache the kernel
-    wrappers read. The headline (``tuned_speedup_vs_default``) is gated by
-    ``bench_gate`` like every other artifact. Needs ``n_devices`` for the
-    mesh rows; re-execs itself with forced host devices otherwise.
+    method on every candidate (pod, data) mesh shape over the forced
+    devices — the rows ``suggest_mesh_shape`` ranks when
+    ``run_population_distributed(mesh=None)`` asks for a shape — and every
+    feasible ``encounter_mix``/``mule_agg`` block-size candidate is
+    measured on the interpret path; the argmin selections land in the
+    cache the kernel wrappers read. The headline
+    (``tuned_speedup_vs_default``) is gated by ``bench_gate`` like every
+    other artifact. Needs ``n_devices`` for the mesh rows; re-execs itself
+    with forced host devices otherwise.
     """
     from repro.launch.autotune import run_roofline
+    from repro.launch.mesh import make_mule_mesh
 
     out_path = os.path.abspath(out_path)
     if jax.device_count() < n_devices:
@@ -526,8 +607,10 @@ def run_roofline_bench(n_devices: int = 8, out_path: str = _DEFAULT_ROOF_OUT,
         with open(out_path) as f:
             payload = json.load(f)
     else:
-        mesh = jax.make_mesh((2, n_devices // 2), ("pod", "data"))
-        payload = run_roofline(out_path, reps=reps, mesh=mesh)
+        shapes = [(p, n_devices // p) for p in (1, 2, 4)
+                  if n_devices % p == 0]
+        meshes = [make_mule_mesh(p, d) for p, d in shapes]
+        payload = run_roofline(out_path, reps=reps, meshes=meshes)
         print(f"wrote {out_path}")
 
     rows = []

@@ -11,15 +11,27 @@ dense path (``encounter_matrix`` + per-leaf ``masked_group_mean``) survives
 below only as the benchmark baseline it was replaced by.
 
 Sharded populations: with a ``RingSpec`` the step runs inside ``shard_map``
-over the mesh mule axis. Each shard holds a block of the population; the
-blocks of (pos, area, active, flattened models) stream around the ring by
-``ppermute``, one ``encounter_block`` partial accumulated per hop, and the
-row normalization happens once at the end — so no shard ever sees the full
-[M, M] matrix either. A 1-shard ring is exactly the single-host *ref* call,
-so the distributed engine is bitwise-equal to single host on a 1-device
-mesh under the default ``enc_backend="ref"`` (the ring has no Pallas
-lowering; against a single-host Pallas run, agreement is to the kernel's
-pinned tolerance).
+over the mesh mule axis. Each shard holds a block of the population; hop
+``s`` ``ppermute``s the original (pos, area, active, flattened models)
+block straight from shard ``(i - s) % n`` (``shift_perm``), one
+``encounter_block`` partial accumulated per hop, and the row normalization
+happens once at the end — so no shard ever sees the full [M, M] matrix
+either. Because the hops are independent shifts of the same block (not a
+chained forward), the ring is locality-aware: each shard publishes a
+32-bit area-set summary (one tiny psum per exchange), and every remote
+hop whose source/destination area sets provably cannot intersect skips
+both its payload ``ppermute`` and its block compute under ``lax.cond`` —
+a pruned hop would have contributed exactly zero, so the pruned and
+unpruned rings agree bitwise. The next hop's permute is issued before the
+in-flight block is consumed (double buffering), and ``backend="pallas"``
+routes each hop's block math through the per-hop tile kernel
+(``encounter_block_hop``). A 1-shard ring is exactly the single-host
+*ref* call, so the distributed engine is bitwise-equal to single host on
+a 1-device mesh under the default ``enc_backend="ref"``.
+
+Mules should be ordered by spatial bucket for the pruning to bite — see
+``repro.core.distributed.bucket_mule_order`` (build-time ordering) and
+``migrate_mules`` (the mid-run re-bucketing primitive).
 """
 from __future__ import annotations
 
@@ -31,8 +43,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import batched_mix, masked_group_mean
-from repro.kernels.encounter_mix import (encounter_block, encounter_mix,
+from repro.kernels.encounter_mix import (encounter_block,
+                                         encounter_block_hop, encounter_mix,
                                          normalize_mix)
+
+N_AREA_BITS = 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,13 +55,98 @@ class RingSpec:
     """Mesh ring for cross-shard encounter search.
 
     ``axis_name`` is the shard_map mule axis; ``axis_size`` its static size
-    (the ring unrolls one ``ppermute`` hop per shard).
+    (the ring unrolls one ``ppermute`` hop per shard). ``prune`` enables
+    the area-bitmask hop pruning — exact, so it is on by default; the
+    benchmarks flip it off to measure the dense ring.
     """
     axis_name: str
     axis_size: int
+    prune: bool = True
 
     def perm(self) -> List[Tuple[int, int]]:
         return [(s, (s + 1) % self.axis_size) for s in range(self.axis_size)]
+
+    def shift_perm(self, s: int) -> List[Tuple[int, int]]:
+        """Permutation delivering shard j's block to shard (j + s) % n —
+        i.e. after one ppermute every shard i holds shard (i - s) % n."""
+        return [(j, (j + s) % self.axis_size)
+                for j in range(self.axis_size)]
+
+
+def area_bits(area: jnp.ndarray, active: Optional[jnp.ndarray] = None,
+              n_bits: int = N_AREA_BITS) -> jnp.ndarray:
+    """[m] int areas (+ optional [m] active mask) -> [n_bits] bool summary.
+
+    Bit ``b`` is set iff some active row has ``area % n_bits == b``. Hash
+    collisions (areas ``n_bits`` apart) can only *add* bits, so a predicate
+    built on these summaries may keep a skippable hop but can never prune a
+    hop whose blocks truly share an area.
+    """
+    hit = (area[:, None] % n_bits) == jnp.arange(n_bits)[None, :]
+    if active is not None:
+        hit = hit & active[:, None]
+    return jnp.any(hit, axis=0)
+
+
+def hops_needed(all_bits: jnp.ndarray) -> jnp.ndarray:
+    """[n_shards, n_bits] per-shard area summaries -> [n_shards] bool.
+
+    Entry ``s`` answers: does *any* shard's area set intersect the area set
+    of its shift-``s`` ring source ``(i - s) % n``? (``roll(+s)`` aligns
+    each row ``i`` with row ``(i - s) % n``.) Entry 0 — the shard-local
+    block — is True whenever any shard has an active mule.
+    """
+    n = all_bits.shape[0]
+    return jnp.stack([jnp.any(all_bits & jnp.roll(all_bits, s, axis=0))
+                      for s in range(n)])
+
+
+def ring_hop_mask(area: jnp.ndarray, active: Optional[jnp.ndarray],
+                  n_shards: int) -> jnp.ndarray:
+    """Host-side mirror of the in-ring pruning predicate.
+
+    Splits the global ``area``/``active`` rows into ``n_shards`` equal
+    blocks (the shard layout) and returns the [n_shards] bool hop mask the
+    pruned ring computes — shared by the benchmark telemetry and the
+    property tests so both exercise the exact predicate the ring runs.
+    """
+    m_loc = area.shape[0] // n_shards
+    blocks = []
+    for k in range(n_shards):
+        sl = slice(k * m_loc, (k + 1) * m_loc)
+        blocks.append(area_bits(jnp.asarray(area)[sl],
+                                None if active is None
+                                else jnp.asarray(active)[sl]))
+    return hops_needed(jnp.stack(blocks))
+
+
+def _ring_need(area, act, ring: RingSpec) -> jnp.ndarray:
+    """Replicated [axis_size] hop mask, computed in-ring via one psum.
+
+    The per-shard bitmask is scattered into an [n, n_bits] table with a
+    ``psum`` (rather than ``all_gather``) so the result is known-replicated
+    and may gate a ``lax.cond`` whose true branch contains a collective.
+    """
+    n = ring.axis_size
+    i = jax.lax.axis_index(ring.axis_name)
+    bits = area_bits(area, act)
+    mine = ((jnp.arange(n) == i).astype(jnp.float32)[:, None]
+            * bits.astype(jnp.float32)[None, :])
+    all_bits = jax.lax.psum(mine, ring.axis_name) > 0
+    return hops_needed(all_bits)
+
+
+def _ring_shift(orig, s: int, ring: RingSpec, need):
+    """ppermute ``orig`` around the ring by shift ``s``; when hop ``s`` is
+    pruned the transfer itself is skipped (the untouched tuple flows into
+    a consume that the same predicate also skips)."""
+    def send(o):
+        return jax.tree.map(
+            lambda l: jax.lax.ppermute(l, ring.axis_name,
+                                       ring.shift_perm(s)), o)
+    if need is None:
+        return send(orig)
+    return jax.lax.cond(need[s], send, lambda o: o, orig)
 
 
 def flatten_population(models: Any) -> Tuple[jnp.ndarray, Any]:
@@ -89,33 +189,59 @@ def encounter_matrix(pos: jnp.ndarray, area: jnp.ndarray, radius: float,
 
 def ring_encounter_mix(pos: jnp.ndarray, area: jnp.ndarray,
                        active: Optional[jnp.ndarray], flat: jnp.ndarray, *,
-                       radius: float, ring: RingSpec):
+                       radius: float, ring: RingSpec,
+                       backend: str = "ref",
+                       block_m: Optional[int] = None,
+                       block_d: Optional[int] = None):
     """Blockwise ``encounter_mix`` across the mesh ring (inside shard_map).
 
-    All arguments are this shard's block ([m_loc, ...]). One hop per shard:
-    the visiting (pos, area, active, weights) block is matched against the
-    local rows (``encounter_block``), then permuted onward. Returns the
-    local rows' (mix [m_loc, D], mass [m_loc]).
+    All arguments are this shard's block ([m_loc, ...]). Hop ``s`` matches
+    the local rows against the block ``shift_perm(s)``-permuted straight
+    from shard ``(i - s) % n`` — the same per-hop partials (in the same
+    accumulation order) as a chained single-shift ring, but with hops
+    independent of each other, which buys three things: with ``ring.prune``
+    each remote hop's payload permute *and* block compute sit under a
+    ``lax.cond`` keyed on the per-shard area bitmasks; hop ``s+1``'s
+    permute is issued before hop ``s``'s block is consumed (double
+    buffering, so the transfer overlaps the compute); and ``backend``
+    selects the per-hop block math (``encounter_block_hop`` — ref einsum
+    or the tiled Pallas hop kernel). Returns the local rows'
+    (mix [m_loc, D], mass [m_loc]).
     """
     m_loc = flat.shape[0]
+    n = ring.axis_size
     i = jax.lax.axis_index(ring.axis_name)
     row0 = i * m_loc
     act = (jnp.ones((m_loc,), bool) if active is None else active)
-    visiting = (pos, area, act, flat)
-    acc = jnp.zeros_like(flat, jnp.float32)
-    mass = jnp.zeros((m_loc,), jnp.float32)
-    for s in range(ring.axis_size):
-        col0 = ((i - s) % ring.axis_size) * m_loc
+    orig = (pos, area, act, flat)
+
+    def hop(visiting, col0):
         pos_v, area_v, act_v, flat_v = visiting
-        p_acc, p_mass = encounter_block(pos, area, act, row0,
-                                        pos_v, area_v, act_v, col0,
-                                        flat_v, radius)
-        acc = acc + p_acc
-        mass = mass + p_mass
-        if s + 1 < ring.axis_size:
-            visiting = jax.tree.map(
-                lambda l: jax.lax.ppermute(l, ring.axis_name, ring.perm()),
-                visiting)
+        return encounter_block_hop(pos, area, act, row0, pos_v, area_v,
+                                   act_v, col0, flat_v, radius,
+                                   backend=backend, block_m=block_m,
+                                   block_d=block_d)
+
+    acc, mass = hop(orig, row0)                    # shift 0: local block
+    if n > 1:
+        need = _ring_need(area, act, ring) if ring.prune else None
+
+        def consume(blk, s):
+            col0 = ((i - s) % n) * m_loc
+            if need is None:
+                return hop(blk, col0)
+            return jax.lax.cond(
+                need[s], lambda b: hop(b, col0),
+                lambda b: (jnp.zeros_like(acc), jnp.zeros_like(mass)), blk)
+
+        nxt = _ring_shift(orig, 1, ring, need)
+        for s in range(1, n):
+            blk = nxt
+            if s + 1 < n:       # issue the next transfer before consuming
+                nxt = _ring_shift(orig, s + 1, ring, need)
+            p_acc, p_mass = consume(blk, s)
+            acc = acc + p_acc
+            mass = mass + p_mass
     return normalize_mix(acc, mass), mass
 
 
@@ -139,7 +265,8 @@ def gossip_step(models: Any, pos: jnp.ndarray, area: jnp.ndarray,
                                     backend=backend)
     else:
         mixed, mass = ring_encounter_mix(pos, area, active, flat,
-                                         radius=radius, ring=ring)
+                                         radius=radius, ring=ring,
+                                         backend=backend)
     neigh_mean = unflatten_population(mixed, spec)
     met = (mass > 0).astype(jnp.float32)
     models = batched_mix(models, neigh_mean, gamma * met)           # aggregate

@@ -66,6 +66,9 @@ class DistributedConfig:
     data_axis: str = "data"
     pod_axis: str = "pod"          # "" -> single-pod mesh
     cross_pod: bool = True         # collective schedule (see module docstring)
+    # area-bitmask hop pruning of the peer-exchange ring (exact — a pruned
+    # hop would contribute nothing; False measures the dense ring)
+    ring_prune: bool = True
     # legacy knobs of the retired make_distributed_step ONLY; the scan
     # engine reads alpha/beta (and stat) from pop.freshness instead
     ema_alpha: float = 0.1
@@ -279,3 +282,73 @@ def migrate_mules(mule_models: Any, move_mask: jnp.ndarray, mesh: Mesh,
         out_specs=P(data_axis),
         check_rep=False)
     return sharded(mule_models, move_mask)
+
+
+def bucket_mule_order(area) -> np.ndarray:
+    """[M] area ids -> [M] permutation grouping mules by spatial bucket.
+
+    Stable sort, so the order within a bucket (and the identity when every
+    mule shares one area) is preserved. Applying this at colocation build
+    time makes the population's shard blocks area-contiguous, which is
+    what lets the ring's area-bitmask predicate prune remote hops —
+    interleaved assignments leave every area on every shard and nothing
+    prunable. Mid-run, ``migrate_mules`` is the re-bucketing primitive for
+    mules whose area changes (ROADMAP follow-up).
+    """
+    return np.argsort(np.asarray(area), kind="stable")
+
+
+def reorder_colocation(colocation: Dict[str, Any],
+                       order: np.ndarray) -> Dict[str, Any]:
+    """Apply a mule permutation to every per-mule colocation column.
+
+    Works on any colocation dict whose values are [T, M] (fixed_id /
+    exchange / active / pos [T, M, 2]) or [M] (static area) arrays; the
+    mule axis is the one matching ``len(order)``.
+    """
+    order = np.asarray(order)
+
+    def one(v):
+        a = np.asarray(v)
+        if a.ndim >= 2 and a.shape[1] == order.shape[0]:
+            return a[:, order]
+        if a.ndim >= 1 and a.shape[0] == order.shape[0]:
+            return a[order]
+        return a
+    return {k: one(v) for k, v in colocation.items()}
+
+
+def reorder_mule_state(state: Dict[str, Any], order) -> Dict[str, Any]:
+    """Apply a mule permutation to the per-mule state leaves.
+
+    ``mule_models`` / ``mule_ts`` rows follow their colocation columns
+    (``reorder_colocation``), so a bucket-ordered run is the same
+    simulation with mules renumbered; replicated leaves pass through.
+    """
+    order = jnp.asarray(np.asarray(order))
+    out = dict(state)
+    for k in ("mule_models", "mule_ts"):
+        if k in out and out[k] is not None:
+            out[k] = jax.tree.map(lambda l: l[order], out[k])
+    return out
+
+
+def bucket_locality_fraction(area, n_shards: int) -> float:
+    """Fraction of same-area ordered mule pairs that are shard-local under
+    the equal-block layout of ``area`` over ``n_shards`` shards.
+
+    Same-area pairs are exactly the candidate encounters the ring must
+    cover, so this is the share of encounter work the shard-local hop can
+    serve — the benchmark's bucket-locality telemetry. 1.0 when there are
+    no same-area pairs at all.
+    """
+    a = np.asarray(area)
+    m_loc = a.shape[0] // n_shards
+    local = total = 0
+    for u in np.unique(a):
+        c = int((a == u).sum())
+        total += c * (c - 1)
+        for k in range(n_shards):
+            ck = int((a[k * m_loc:(k + 1) * m_loc] == u).sum())
+            local += ck * (ck - 1)
+    return float(local) / float(total) if total else 1.0

@@ -173,7 +173,10 @@ def compile_distributed_step(program: MethodProgram, train_fn: Callable,
     run inside ``shard_map`` over ``dcfg.data_axis``; ``info`` additionally
     carries the shard-local ``"area"`` block. ``ring_size`` is the static
     data-axis size the peer-exchange ring unrolls over (required for peer
-    programs; the engines read it off the mesh).
+    programs; the engines read it off the mesh). ``dcfg.ring_prune``
+    toggles the ring's exact area-bitmask hop pruning, and
+    ``cfg.enc_backend`` selects the per-hop block math
+    (``encounter_block_hop``), mirroring the single-host lowering.
 
     Key discipline mirrors the single-host lowering exactly: fixed-mode
     training splits the replicated key over ``n_fixed``; every per-mule
@@ -215,7 +218,8 @@ def compile_distributed_step(program: MethodProgram, train_fn: Callable,
                   else jax.random.fold_in(key, program.peer_key_fold))
             act = info.get("active")
             m_loc = info["fixed_id"].shape[0]
-            ring = RingSpec(dcfg.data_axis, ring_size)
+            ring = RingSpec(dcfg.data_axis, ring_size,
+                            prune=getattr(dcfg, "ring_prune", True))
 
             def exchange(models):
                 # key split and batch slice stay inside the branch so the
@@ -224,7 +228,8 @@ def compile_distributed_step(program: MethodProgram, train_fn: Callable,
                                   batches["mule"])
                 keys = _mule_train_keys(dcfg, kp, m_loc)
                 new = peer_fn(models, info["pos"], info["area"], mb,
-                              train_fn, kp, active=act, ring=ring, keys=keys)
+                              train_fn, kp, active=act,
+                              backend=cfg.enc_backend, ring=ring, keys=keys)
                 return apply_activity_mask(act, new, models)
 
             k = program.peer_every

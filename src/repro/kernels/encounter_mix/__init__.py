@@ -1,3 +1,4 @@
-from repro.kernels.encounter_mix.ops import encounter_mix  # noqa: F401
+from repro.kernels.encounter_mix.ops import (  # noqa: F401
+    encounter_block_hop, encounter_mix)
 from repro.kernels.encounter_mix.ref import (  # noqa: F401
     encounter_block, encounter_gate, encounter_mix_reference, normalize_mix)

@@ -95,3 +95,90 @@ def encounter_mix_pallas(pos: jnp.ndarray, area: jnp.ndarray,
         interpret=interpret,
     )(geom, geom, weights)
     return out[:m, :d], mass[0, :m]
+
+
+def _hop_kernel(gv_ref, gr_ref, w_ref, acc_ref, mass_ref, *, radius: float):
+    gv = gv_ref[...].astype(jnp.float32)        # [5, V]        resident
+    gr = gr_ref[...].astype(jnp.float32)        # [5, block_m]  this row block
+
+    dx = gr[0][:, None] - gv[0][None, :]        # [block_m, V]
+    dy = gr[1][:, None] - gv[1][None, :]
+    d2 = dx * dx + dy * dy
+    enc = (d2 <= radius * radius)
+    enc &= gr[2][:, None] == gv[2][None, :]     # area isolation
+    enc &= (gr[3][:, None] > 0) & (gv[3][None, :] > 0)   # both active
+    enc &= gr[4][:, None] != gv[4][None, :]     # global-id self exclusion
+    e = enc.astype(jnp.float32)
+    mass = jnp.sum(e, axis=1)                   # [block_m]
+
+    w = w_ref[...].astype(jnp.float32)          # [V, block_d] streamed
+    acc = jax.lax.dot_general(e, w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    acc_ref[...] = acc.astype(acc_ref.dtype)
+    mass_ref[...] = mass[None, :].astype(mass_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("radius", "block_m", "block_d",
+                                             "interpret"))
+def encounter_hop_pallas(pos_r, area_r, act_r, row0, pos_v, area_v, act_v,
+                         col0, weights_v, *, radius: float = 0.15,
+                         block_m: int = 256, block_d: int = 2048,
+                         interpret: bool = True):
+    """One ring hop of the mix, tiled: local rows [R] vs a visiting block
+    [V] whose global rows start at ``col0`` — the ``encounter_block``
+    contract ((acc [R, D], mass [R]), *unnormalized* partials that the
+    ring accumulates across hops and normalizes once at the end).
+
+    Geometry is a [5, ·] strip per side — x, y, area, active, plus a
+    float32 global row id (``row0``/``col0`` + lane) so self-exclusion
+    works across blocks; the visiting strip stays VMEM-resident while the
+    grid walks (row block, d block) tiles of the visiting weights, exactly
+    the ``encounter_mix_pallas`` streaming shape. ``row0``/``col0`` are
+    traced (the ring derives them from ``axis_index``), so one compiled
+    kernel serves every hop.
+    """
+    r = pos_r.shape[0]
+    v, d = weights_v.shape
+    block_m = min(block_m, max(8, r))
+    block_d = min(block_d, max(128, d))
+    nr, nd = -(-r // block_m), -(-d // block_d)
+    r_pad, d_pad = nr * block_m, nd * block_d
+    v_pad = max(8, v)
+
+    def geom(pos, area, act, g0, n, n_pad):
+        g = jnp.stack([pos[:, 0].astype(jnp.float32),
+                       pos[:, 1].astype(jnp.float32),
+                       area.astype(jnp.float32),
+                       act.astype(jnp.float32),
+                       g0 + jnp.arange(n, dtype=jnp.float32)])   # [5, n]
+        if n_pad != n:
+            # padded lanes carry active=0, so they join no encounter
+            g = jnp.pad(g, ((0, 0), (0, n_pad - n)))
+        return g
+
+    geom_r = geom(pos_r, area_r, act_r, row0, r, r_pad)
+    geom_v = geom(pos_v, area_v, act_v, col0, v, v_pad)
+    if v_pad != v:
+        weights_v = jnp.pad(weights_v, ((0, v_pad - v), (0, 0)))
+    if d_pad != d:
+        weights_v = jnp.pad(weights_v, ((0, 0), (0, d_pad - d)))
+
+    acc, mass = pl.pallas_call(
+        functools.partial(_hop_kernel, radius=radius),
+        grid=(nr, nd),
+        in_specs=[
+            pl.BlockSpec((5, v_pad), lambda i, j: (0, 0)),      # resident
+            pl.BlockSpec((5, block_m), lambda i, j: (0, i)),    # row block
+            pl.BlockSpec((v_pad, block_d), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_d), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_m), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, r_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(geom_v, geom_r, weights_v)
+    return acc[:r, :d], mass[0, :r]

@@ -147,6 +147,48 @@ def tuned_encounter_blocks(
     return default
 
 
+def suggest_mesh_shape(method: str, n_mules: int,
+                       path: Optional[str] = None
+                       ) -> Optional[Tuple[int, int]]:
+    """(pod, data) mesh shape minimizing collective+memory roofline seconds.
+
+    Scans the cache's mesh rows (``roofline`` entries with an ``AxB`` mesh
+    string — the distributed cells ``roofline_sweep`` records per shape),
+    keeps the rows for ``method`` when any exist (else all mesh rows),
+    takes each shape's nearest-``n_mules`` row, and returns the shape whose
+    per-step ``t_collective + t_memory`` is smallest — the two terms the
+    mesh shape actually moves (compute per device is shape-invariant at
+    fixed chip count). Returns ``None`` without a usable cache, exactly
+    like the block-size lookups: callers must keep their own fallback.
+    """
+    cache = load_tuning_cache(path)
+    if not cache:
+        return None
+    rows = [r for r in cache.get("roofline", [])
+            if isinstance(r, dict) and isinstance(r.get("mesh"), str)
+            and "x" in r["mesh"]]
+    mine = [r for r in rows if r.get("method") == method] or rows
+    by_shape: Dict[str, List[Dict]] = {}
+    for r in mine:
+        by_shape.setdefault(r["mesh"], []).append(r)
+    best, best_cost = None, None
+    for shape, entries in by_shape.items():
+        e = _nearest(entries, {"n_mules": n_mules})
+        if e is None:
+            continue
+        try:
+            cost = (float(e["t_collective_us_per_step"])
+                    + float(e["t_memory_us_per_step"]))
+            dims = tuple(int(x) for x in shape.split("x"))
+        except (KeyError, TypeError, ValueError):
+            continue
+        if len(dims) != 2 or any(x < 1 for x in dims):
+            continue
+        if best_cost is None or cost < best_cost:
+            best, best_cost = dims, cost
+    return best
+
+
 # ---------------------------------------------------------------------------
 # VMEM feasibility model (per-grid-step tile working set, f32 accumulators)
 # ---------------------------------------------------------------------------
@@ -337,14 +379,17 @@ def analyze_engine_step(method: str, n_mules: int = 32, steps: int = 24,
 def roofline_sweep(methods: Optional[Sequence[str]] = None,
                    mule_counts: Sequence[int] = (32, 128),
                    steps: int = 24,
-                   mesh=None,
+                   mesh=None, meshes: Sequence = (),
                    mesh_methods: Sequence[str] = ("mlmule", "gossip"),
                    mesh_mules: int = 64) -> List[Dict]:
     """The (method × M × mesh) grid behind ``BENCH_roofline.json``.
 
-    Single-host rows for every method at every ``mule_counts``; when a mesh
-    is supplied, distributed rows for ``mesh_methods`` at ``mesh_mules``
-    (collective terms are zero everywhere else by construction).
+    Single-host rows for every method at every ``mule_counts``; distributed
+    rows for ``mesh_methods`` at ``mesh_mules`` on every supplied mesh
+    (``mesh`` is the legacy single-mesh spelling; ``meshes`` records one
+    row set per shape so ``suggest_mesh_shape`` has real alternatives to
+    rank). Collective terms are zero on the single-host rows by
+    construction.
     """
     from repro.core.population import METHODS_MOBILE
 
@@ -352,8 +397,9 @@ def roofline_sweep(methods: Optional[Sequence[str]] = None,
         methods = METHODS_MOBILE
     rows = [analyze_engine_step(m, n, steps)
             for m in methods for n in mule_counts]
-    if mesh is not None:
-        rows += [analyze_engine_step(m, mesh_mules, steps, mesh=mesh)
+    all_meshes = list(meshes) + ([mesh] if mesh is not None else [])
+    for ms in all_meshes:
+        rows += [analyze_engine_step(m, mesh_mules, steps, mesh=ms)
                  for m in mesh_methods]
     return rows
 
@@ -366,6 +412,7 @@ def _geomean(xs: Sequence[float]) -> float:
 def run_roofline(out_path: str = DEFAULT_CACHE_PATH, *, reps: int = 3,
                  steps: int = 24, mule_counts: Sequence[int] = (32, 128),
                  methods: Optional[Sequence[str]] = None, mesh=None,
+                 meshes: Sequence = (),
                  mule_agg_shapes: Sequence[Tuple[int, int, int]]
                  = ((8, 64, 4096), (8, 64, 65536)),
                  encounter_shapes: Sequence[Tuple[int, int]]
@@ -380,7 +427,7 @@ def run_roofline(out_path: str = DEFAULT_CACHE_PATH, *, reps: int = 3,
     import jax
 
     rows = roofline_sweep(methods=methods, mule_counts=mule_counts,
-                          steps=steps, mesh=mesh)
+                          steps=steps, mesh=mesh, meshes=meshes)
     tuned_ma = [tune_mule_agg(f, m, d, reps=reps)
                 for f, m, d in mule_agg_shapes]
     tuned_em = [tune_encounter_mix(m, d, reps=reps)
@@ -395,6 +442,8 @@ def run_roofline(out_path: str = DEFAULT_CACHE_PATH, *, reps: int = 3,
             "mule_counts": list(mule_counts),
             "mesh": (None if mesh is None
                      else "x".join(str(s) for s in mesh.shape.values())),
+            "meshes": ["x".join(str(s) for s in ms.shape.values())
+                       for ms in meshes],
             "vmem_budget_bytes": VMEM_BUDGET_BYTES,
         },
         "roofline": [

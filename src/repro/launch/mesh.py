@@ -32,6 +32,23 @@ def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
         axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
+def make_mule_mesh(pod: int, data: int, *, pod_axis: str = "pod",
+                   data_axis: str = "data"):
+    """(pod, data) mesh for the mule-sharded scenario engine.
+
+    The shape the roofline-driven ``suggest_mesh_shape`` emits and
+    ``run_population_distributed(mesh=None)`` consumes; ``pod_axis=""``
+    builds the single-axis data-only mesh a podless ``DistributedConfig``
+    expects. Plain ``jax.make_mesh`` (no axis-type annotations) so it works
+    on every jax the repo supports.
+    """
+    if not pod_axis:
+        if pod != 1:
+            raise ValueError(f"pod={pod} needs a pod axis name")
+        return jax.make_mesh((data,), (data_axis,))
+    return jax.make_mesh((pod, data), (pod_axis, data_axis))
+
+
 def batch_axes(mesh) -> tuple:
     """Mesh axes that carry the global batch / population dimension."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -482,9 +482,37 @@ def _check_mule_sharding(n_mules: int, mesh, dcfg) -> None:
             f"{dcfg.data_axis!r} mesh axis (size {shards})")
 
 
+def _auto_mesh(method: str, n_mules: int, dcfg):
+    """Mesh for ``run_population_distributed(mesh=None)``.
+
+    Consults ``suggest_mesh_shape`` — the roofline-ranked (pod, data)
+    shape from the committed ``BENCH_roofline.json`` mesh rows — the way
+    the kernels consult ``tuned_block_d``; a suggestion that doesn't fit
+    this process (too few devices, a data size that doesn't divide
+    ``n_mules``, a pod axis the dcfg doesn't carry) falls back, like an
+    absent cache, to the largest single-pod data axis the local devices
+    allow.
+    """
+    import jax
+    from repro.launch.autotune import suggest_mesh_shape
+    from repro.launch.mesh import make_mule_mesh
+
+    n_dev = jax.device_count()
+    shape = suggest_mesh_shape(method, n_mules)
+    if shape is not None:
+        pod, data = shape
+        if (pod * data <= n_dev and data and n_mules % data == 0
+                and (dcfg.pod_axis or pod == 1)):
+            return make_mule_mesh(pod, data, pod_axis=dcfg.pod_axis,
+                                  data_axis=dcfg.data_axis)
+    data = max(d for d in range(1, n_dev + 1) if n_mules % d == 0)
+    return make_mule_mesh(1, data, pod_axis=dcfg.pod_axis,
+                          data_axis=dcfg.data_axis)
+
+
 def run_population_distributed(state: Dict[str, Any],
                                colocation: Dict[str, Any], batches: Any,
-                               train_fn: TrainFn, dcfg, mesh, key, *,
+                               train_fn: TrainFn, dcfg, mesh=None, key=None, *,
                                eval_every: Optional[int] = None,
                                eval_fn: Optional[Callable] = None,
                                method: str = "mlmule", context: Any = None,
@@ -504,7 +532,11 @@ def run_population_distributed(state: Dict[str, Any],
              statistic comes from ``dcfg.pop.freshness.stat``.
     mesh:    a ``jax.sharding.Mesh`` whose axes include ``dcfg.data_axis``
              (and ``dcfg.pod_axis`` when set). ``n_mules`` must divide the
-             data-axis size.
+             data-axis size. ``None`` picks a shape automatically: the
+             roofline-ranked suggestion from the committed
+             ``BENCH_roofline.json`` mesh rows (``suggest_mesh_shape``,
+             consulted the way the kernels consult ``tuned_block_d``),
+             falling back to the widest fitting single-pod data axis.
     batches: the ``run_population`` contract; a batch callable runs inside
              every shard on the replicated key, so it must be
              deterministic in ``(key, t[, context])``; full ``[n_mules,
@@ -526,8 +558,13 @@ def run_population_distributed(state: Dict[str, Any],
 
     Returns ``(final_state, aux)`` exactly like ``run_population``.
     """
+    if key is None:
+        raise TypeError("run_population_distributed() missing required "
+                        "argument: 'key'")
     fid, exch, pos, area, act = _colocation_tensors(colocation)
     n_steps = fid.shape[0]
+    if mesh is None:
+        mesh = _auto_mesh(method, fid.shape[1], dcfg)
     _check_mule_sharding(fid.shape[1], mesh, dcfg)
     stacked = None if callable(batches) else batches
     fn = get_compiled_replay(state, fid, exch, pos, area, act, batches,

@@ -245,6 +245,88 @@ def test_run_roofline_artifact_validates(tmp_path):
                                     on_disk, payload).ok
 
 
+# ---------------------------------------------------------------------------
+# roofline-driven mesh-shape suggestion
+# ---------------------------------------------------------------------------
+
+
+def _mesh_row(mesh, method, n_mules, coll, mem):
+    return {"mesh": mesh, "method": method, "n_mules": n_mules,
+            "t_collective_us_per_step": coll, "t_memory_us_per_step": mem}
+
+
+def _write_mesh_cache(path, rows):
+    path.write_text(json.dumps(
+        {"bench": "autotune.run_roofline", "config": {}, "roofline": rows,
+         "tuned": {"mule_agg": [], "encounter_mix": []},
+         "tuned_speedup_vs_default": 1.0}))
+
+
+def test_suggest_mesh_shape_minimizes_coll_plus_mem(tmp_path, monkeypatch):
+    cache = tmp_path / "cache.json"
+    _write_mesh_cache(cache, [
+        _mesh_row("1x8", "gossip", 64, 10.0, 5.0),     # cost 15
+        _mesh_row("2x4", "gossip", 64, 4.0, 5.0),      # cost 9  <- min
+        _mesh_row("4x2", "gossip", 64, 9.0, 9.0),      # cost 18
+        _mesh_row("1", "gossip", 64, 0.0, 0.0),        # host row: not a shape
+    ])
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+    tuning_cache_clear()
+    assert autotune.suggest_mesh_shape("gossip", 64) == (2, 4)
+
+
+def test_suggest_mesh_shape_method_filter_and_fallback(tmp_path, monkeypatch):
+    cache = tmp_path / "cache.json"
+    _write_mesh_cache(cache, [
+        _mesh_row("1x8", "gossip", 64, 1.0, 1.0),
+        _mesh_row("2x4", "oppcl", 64, 0.5, 0.5),
+    ])
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+    tuning_cache_clear()
+    # rows for the method win even when another method's row is cheaper
+    assert autotune.suggest_mesh_shape("gossip", 64) == (1, 8)
+    assert autotune.suggest_mesh_shape("oppcl", 64) == (2, 4)
+    # unknown method falls back to all mesh rows -> global min
+    assert autotune.suggest_mesh_shape("mlmule", 64) == (2, 4)
+
+
+def test_suggest_mesh_shape_nearest_population(tmp_path, monkeypatch):
+    cache = tmp_path / "cache.json"
+    _write_mesh_cache(cache, [
+        _mesh_row("1x8", "gossip", 32, 1.0, 1.0),      # cheap at M=32
+        _mesh_row("1x8", "gossip", 4096, 50.0, 50.0),  # dear at M=4096
+        _mesh_row("2x4", "gossip", 32, 30.0, 30.0),
+        _mesh_row("2x4", "gossip", 4096, 20.0, 20.0),
+    ])
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+    tuning_cache_clear()
+    assert autotune.suggest_mesh_shape("gossip", 16) == (1, 8)
+    assert autotune.suggest_mesh_shape("gossip", 8192) == (2, 4)
+
+
+def test_suggest_mesh_shape_without_cache_or_rows(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_CACHE", "")
+    tuning_cache_clear()
+    assert autotune.suggest_mesh_shape("gossip", 64) is None
+    cache = tmp_path / "cache.json"
+    _write_mesh_cache(cache, [
+        _mesh_row("1", "gossip", 64, 1.0, 1.0),        # host rows only
+        {"mesh": "2x4", "method": "gossip", "n_mules": 64},  # terms missing
+        _mesh_row("axb", "gossip", 64, 1.0, 1.0),      # unparseable shape
+    ])
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+    tuning_cache_clear()
+    assert autotune.suggest_mesh_shape("gossip", 64) is None
+
+
+def test_committed_roofline_suggests_a_real_shape():
+    """The repo's committed artifact carries per-mesh rows; the suggestion
+    must come back as a usable 8-chip shape for every peer method."""
+    for method in ("gossip", "oppcl", "mlmule", "mlmule+gossip"):
+        shape = autotune.suggest_mesh_shape(method, 64)
+        assert shape is not None and shape[0] * shape[1] == 8, (method, shape)
+
+
 def test_tune_handles_tiny_shapes():
     # candidates clamp exactly like the kernels; a shape smaller than every
     # candidate must still tune (regression: empty-candidate crash)

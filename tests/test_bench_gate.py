@@ -95,6 +95,25 @@ def test_roofline_slack_around_unity():
     assert not gate_artifact("BENCH_roofline.json", base, real).ok
 
 
+def test_extra_headline_regression_trips():
+    # BENCH_encounter gates ring_vs_host alongside the primary headline:
+    # a held primary with a collapsed ring ratio must still fail, and the
+    # failure reason must name the extra metric
+    base = _payload("BENCH_encounter.json", headline=2.0, ring_vs_host=6.0)
+    fresh = _payload("BENCH_encounter.json", headline=2.0, ring_vs_host=0.5)
+    r = gate_artifact("BENCH_encounter.json", base, fresh)
+    assert not r.ok
+    assert "ring_vs_host" in r.reason
+    # both held -> pass; extra improved + primary held -> pass
+    assert gate_artifact("BENCH_encounter.json", base, dict(base)).ok
+    better = _payload("BENCH_encounter.json", headline=2.0, ring_vs_host=9.0)
+    assert gate_artifact("BENCH_encounter.json", base, better).ok
+
+
+def test_extra_headline_in_describe():
+    assert "ring_vs_host" in ARTIFACTS["BENCH_encounter.json"].describe()
+
+
 def test_threshold_is_configurable():
     base = _payload("BENCH_sweep.json", headline=10.0)
     fresh = _payload("BENCH_sweep.json", headline=8.0)
