@@ -108,6 +108,21 @@ ARTIFACTS: Dict[str, ArtifactSchema] = {
         # bench runs both the pruned and unpruned ring variants and this
         # gates the pruned ring's speedup over the single-host path
         extra_headlines=(("ring_vs_host", True, 0.0),)),
+    "BENCH_scale.json": ArtifactSchema(
+        bench="engine_micro.run_scale_bench",
+        required={"curve": list, "max_m": int,
+                  "steps_per_sec_at_max_m": float,
+                  "parity_bitwise_all_m": bool,
+                  "stream_schedule_bytes_at_max_m": int,
+                  "materialized_schedule_bytes_at_max_m": int,
+                  "schedule_bytes_ratio": float,
+                  "peak_rss_stream_mb_at_max_m": float,
+                  "peak_rss_materialized_mb_at_max_m": float,
+                  "retraces_new_t": int},
+        # throughput of the streamed engine at the largest M on the curve;
+        # RSS and schedule-bytes columns are telemetry for the O(chunk·M)
+        # claim (asserted analytically in-bench, recorded here)
+        headline="steps_per_sec_at_max_m", higher_is_better=True),
     "BENCH_roofline.json": ArtifactSchema(
         bench="autotune.run_roofline",
         required={"roofline": list, "tuned": dict,

@@ -28,12 +28,13 @@ from repro.core.freshness import FreshnessConfig
 from repro.data import (dirichlet_partition, iid_partition, make_image_dataset,
                         make_imu_dataset, shards_partition)
 from repro.data.partition import train_test_split
-from repro.mobility import synth_foursquare_trace
+from repro.mobility import compact_colocation, synth_foursquare_trace
 from repro.models.cnn import (accuracy, cnn_forward, init_cnn, init_lstm_cnn,
                               lstm_cnn_forward, xent_loss)
-from repro.scenarios import (get_scenario, run_population, run_sweep,
-                             stack_colocations, stack_trees,
-                             trace_colocation, walk_colocation)
+from repro.scenarios import (get_scenario, run_population,
+                             run_population_streamed, run_sweep,
+                             scenario_generator, stack_colocations,
+                             stack_trees, trace_colocation, walk_colocation)
 
 METHODS_FIXED = ("mlmule", "fedavg", "cfl", "fedas", "local")
 
@@ -67,6 +68,13 @@ class ExperimentConfig:
                                    # mode/dist/task/pattern when set
     distributed: bool = False      # replay on the mule-sharded engine over
                                    # the available devices (all methods)
+    stream: bool = False           # generate colocation chunk-by-chunk
+                                   # inside the compiled replay (O(chunk·M)
+                                   # schedule memory) instead of scanning
+                                   # the materialized [T, M] tensors;
+                                   # results are bitwise-identical
+    stream_chunk: int = 0          # steps per streamed chunk (0 = auto:
+                                   # eval_every when evals run, else 64)
 
 
 # ---------------------------------------------------------------------------
@@ -378,6 +386,16 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
         # is one compiled program. The input population is not read again,
         # so its buffers are donated and the replay updates in place.
         key, ke = jax.random.split(key)
+        generator = None
+        if cfg.stream:
+            # streamed replay: the schedule is generated chunk-by-chunk
+            # inside the compiled scan. Scenarios with a native generator
+            # stream procedurally; everything else streams the compacted
+            # form of the colocation already built for the data partition.
+            generator = (scenario_generator(cfg.scenario, cfg.seed,
+                                            cfg.n_mules, cfg.steps,
+                                            colocation=colocation)
+                         if cfg.scenario else compact_colocation(colocation))
         if cfg.distributed:
             # mule-sharded replay: every method lowers through the one
             # MethodProgram table (the peer baselines ring their encounter
@@ -389,11 +407,29 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
             from repro.scenarios import run_population_distributed
             dcfg = DistributedConfig(pop=pcfg)
             mesh = _mule_mesh(cfg.n_mules)
-            pop, aux = run_population_distributed(
-                to_distributed_state(pop, dcfg), colocation, batch_fn,
-                train_fn, dcfg, mesh, ke,
-                eval_every=cfg.eval_every if cfg.mode == "fixed" else None,
-                eval_fn=eval_hook if cfg.mode == "fixed" else None,
+            dist_eval = cfg.mode == "fixed"
+            if cfg.stream:
+                chunk = cfg.stream_chunk or (cfg.eval_every if dist_eval
+                                             else 64)
+                pop, aux = run_population_streamed(
+                    to_distributed_state(pop, dcfg), generator, batch_fn,
+                    train_fn, pcfg, ke, n_steps=cfg.steps, chunk_len=chunk,
+                    eval_every=cfg.eval_every if dist_eval else None,
+                    eval_fn=eval_hook if dist_eval else None,
+                    method=cfg.method, donate=True, mesh=mesh, dcfg=dcfg)
+            else:
+                pop, aux = run_population_distributed(
+                    to_distributed_state(pop, dcfg), colocation, batch_fn,
+                    train_fn, dcfg, mesh, ke,
+                    eval_every=cfg.eval_every if dist_eval else None,
+                    eval_fn=eval_hook if dist_eval else None,
+                    method=cfg.method, donate=True)
+        elif cfg.stream:
+            pop, aux = run_population_streamed(
+                pop, generator, batch_fn, train_fn, pcfg, ke,
+                n_steps=cfg.steps,
+                chunk_len=cfg.stream_chunk or cfg.eval_every,
+                eval_every=cfg.eval_every, eval_fn=eval_hook,
                 method=cfg.method, donate=True)
         else:
             pop, aux = run_population(pop, colocation, batch_fn, train_fn,

@@ -48,6 +48,15 @@ cache ``BENCH_roofline.json`` that ``encounter_mix``/``mule_agg`` read
 their tile sizes from. Needs ≥ 8 devices for the mesh rows; re-execs
 itself with forced host devices like the distributed bench.
 
+``run_scale_bench()`` — the population-scale curve (``--scale``): the
+streamed engine (``run_population_streamed`` + the procedural
+``commuter_stream`` generator, O(chunk·M) schedule memory) vs the classic
+materialized ``[T, M]`` replay, per M up to 10^5, each (M, mode) in its own
+subprocess so ``ru_maxrss`` is honest per-engine peak-RSS telemetry.
+Cross-process sha256 digests of the final mule models pin streamed ==
+materialized bitwise at every M, and a half-horizon replay pins the chunk
+program as T-free (zero retraces). Results land in ``BENCH_scale.json``.
+
 Every artifact is a gated ratchet: ``--gate-baseline DIR`` compares
 whatever artifacts this invocation produced against the committed copies
 in DIR via ``benchmarks.bench_gate`` and exits non-zero on a regression
@@ -91,6 +100,8 @@ _DEFAULT_ENC_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "BENCH_encounter.json")
 _DEFAULT_ROOF_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                  "BENCH_roofline.json")
+_DEFAULT_SCALE_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "BENCH_scale.json")
 
 
 def _setup(n_fixed=8, n_mules=20, steps=500, batch=2, image=4, seed=0):
@@ -769,6 +780,202 @@ def run_distributed_bench(n_devices: int = 8, n_mules: int = 64,
     return rows
 
 
+_SCALE_MARK = "SCALE_CHILD_RESULT "
+
+
+def _scale_workload(n_mules: int):
+    """Linear mule-regression workload for the scale sweep: per-step cost
+    is dominated by population/exchange machinery, not model FLOPs, so
+    steps/sec tracks the engine, and batches are sampled inside the scan
+    (no [M, dataset] tensor competing with the schedule for RSS)."""
+    d = 8
+
+    def train_fn(params, b, k):
+        xb, yb = b
+        g = jax.grad(lambda p: jnp.mean((xb @ p["w"] - yb) ** 2))(params)
+        return jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+
+    def batch_fn(k, t):
+        kx, ky = jax.random.split(k)
+        return {"fixed": None,
+                "mule": (jax.random.normal(kx, (n_mules, 2, d)),
+                         jax.random.normal(ky, (n_mules, 2)))}
+
+    pcfg = PopulationConfig(mode="mobile", n_fixed=8, n_mules=n_mules)
+
+    def init_pop():
+        return init_population(
+            jax.random.PRNGKey(1),
+            lambda k: {"w": jax.random.normal(k, (d,))}, pcfg)
+
+    return init_pop, batch_fn, train_fn, pcfg
+
+
+def _scale_child(cfg_json: str) -> None:
+    """One (M, engine-mode) measurement, isolated in its own process so
+    ``ru_maxrss`` is that engine's peak alone and the two modes can't share
+    XLA allocations. Prints one marked JSON line the parent parses."""
+    import hashlib
+    import resource
+
+    import numpy as np
+
+    from repro.mobility import commuter_stream, materialize_generator
+    from repro.scenarios import run_population_streamed
+
+    cfg = json.loads(cfg_json)
+    m, steps = int(cfg["m"]), int(cfg["steps"])
+    chunk_len, mode = int(cfg["chunk_len"]), cfg["mode"]
+    init_pop, batch_fn, train_fn, pcfg = _scale_workload(m)
+    key = jax.random.PRNGKey(42)
+    gen = commuter_stream(0, m, steps)
+
+    retraces = None
+    if mode == "stream":
+        # schedule memory: the generator's O(M) params + the [chunk, M]
+        # slices live inside one compiled dispatch (fid 4B + exch 1B +
+        # pos 8B + active 1B per cell)
+        sched_bytes = gen.schedule_bytes() + chunk_len * m * 14
+        _block(run_population_streamed(init_pop(), gen, batch_fn, train_fn,
+                                       pcfg, key, chunk_len=chunk_len)[0])
+        t0 = time.perf_counter()
+        final, _ = run_population_streamed(init_pop(), gen, batch_fn,
+                                           train_fn, pcfg, key,
+                                           chunk_len=chunk_len)
+        _block(final)
+        dt = time.perf_counter() - t0
+        # the compiled chunk program must be horizon-free: a half-length
+        # generator replays through the same cache entry, zero new traces
+        before = jit_cache_stats()["traces"]
+        gen2 = commuter_stream(0, m, (steps // 2) // chunk_len * chunk_len)
+        _block(run_population_streamed(init_pop(), gen2, batch_fn, train_fn,
+                                       pcfg, key, chunk_len=chunk_len)[0])
+        retraces = jit_cache_stats()["traces"] - before
+    else:
+        co = materialize_generator(gen, chunk_len=max(chunk_len, 64))
+        sched_bytes = sum(
+            np.asarray(co[k]).nbytes
+            for k in ("fixed_id", "exchange", "pos", "active", "area"))
+        _block(run_population(init_pop(), co, batch_fn, train_fn, pcfg, key,
+                              donate=True)[0])
+        t0 = time.perf_counter()
+        final, _ = run_population(init_pop(), co, batch_fn, train_fn, pcfg,
+                                  key, donate=True)
+        _block(final)
+        dt = time.perf_counter() - t0
+
+    w = np.ascontiguousarray(np.asarray(final["mule_models"]["w"],
+                                        np.float32))
+    out = {
+        "m": m, "mode": mode,
+        "steps_per_sec": steps / dt, "wall_s": dt,
+        "schedule_bytes": int(sched_bytes),
+        "peak_rss_mb": resource.getrusage(
+            resource.RUSAGE_SELF).ru_maxrss / 1024.0,   # linux: KB units
+        "digest": hashlib.sha256(w.tobytes()).hexdigest(),
+    }
+    if retraces is not None:
+        out["retraces_new_t"] = int(retraces)
+    print(_SCALE_MARK + json.dumps(out))
+
+
+def _spawn_scale_child(cfg: dict) -> dict:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep +
+                         env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    res = subprocess.run([sys.executable, "-m", "benchmarks.engine_micro",
+                          "--scale-child", json.dumps(cfg)],
+                         env=env, cwd=root, check=True,
+                         capture_output=True, text=True)
+    for line in res.stdout.splitlines():
+        if line.startswith(_SCALE_MARK):
+            return json.loads(line[len(_SCALE_MARK):])
+    raise RuntimeError(f"scale child produced no result:\n"
+                       f"{res.stdout}\n{res.stderr}")
+
+
+def run_scale_bench(ms=(10_000, 32_000, 100_000), steps: int = 96,
+                    chunk_len: int = 8, out_path: str = _DEFAULT_SCALE_OUT):
+    """Population-scale curve: streamed vs materialized engine over M.
+
+    Per M (each mode in its own subprocess for honest peak-RSS):
+
+    - **stream** — ``run_population_streamed`` over the procedural
+      ``commuter_stream`` generator; schedule memory is the generator's
+      O(M) params plus one [chunk, M] slice. The child also proves the
+      chunk program is horizon-free (a half-length replay adds zero
+      traces, reported as ``retraces_new_t``).
+    - **materialized** — ``run_population`` over
+      ``materialize_generator(...)``'s full ``[T, M]`` tensors, the
+      classic engine and the parity reference.
+
+    Parity is cross-process: both children hash their final mule models
+    (XLA CPU is deterministic) and the digests must match at EVERY M —
+    streaming changes memory, never results. The bench asserts schedule
+    bytes stay T-free on the stream side (O(chunk·M) vs the materialized
+    O(T·M)) and records both RSS peaks; the gated headline is streamed
+    steps/sec at the largest M (``BENCH_scale.json``).
+    """
+    out_path = os.path.abspath(out_path)
+    ms = sorted(int(m) for m in ms)
+    curve = []
+    for m in ms:
+        base = {"m": m, "steps": steps, "chunk_len": chunk_len}
+        s = _spawn_scale_child({**base, "mode": "stream"})
+        r = _spawn_scale_child({**base, "mode": "materialized"})
+        assert s["digest"] == r["digest"], \
+            f"M={m}: streamed models != materialized models (parity broken)"
+        assert s["retraces_new_t"] == 0, \
+            f"M={m}: chunk program retraced on a new horizon"
+        assert s["schedule_bytes"] < r["schedule_bytes"], \
+            f"M={m}: streaming failed to shrink the schedule"
+        row = {
+            "m": m,
+            "stream_steps_per_sec": round(s["steps_per_sec"], 2),
+            "materialized_steps_per_sec": round(r["steps_per_sec"], 2),
+            "stream_schedule_bytes": s["schedule_bytes"],
+            "materialized_schedule_bytes": r["schedule_bytes"],
+            "peak_rss_stream_mb": round(s["peak_rss_mb"], 1),
+            "peak_rss_materialized_mb": round(r["peak_rss_mb"], 1),
+            "parity_bitwise": True,
+            "retraces_new_t": s["retraces_new_t"],
+        }
+        curve.append(row)
+        print(f"scale.M{m}: stream {row['stream_steps_per_sec']:.1f} "
+              f"steps/s ({row['stream_schedule_bytes'] / 1e6:.1f} MB sched, "
+              f"rss {row['peak_rss_stream_mb']:.0f} MB) | materialized "
+              f"{row['materialized_steps_per_sec']:.1f} steps/s "
+              f"({row['materialized_schedule_bytes'] / 1e6:.1f} MB sched, "
+              f"rss {row['peak_rss_materialized_mb']:.0f} MB) | parity OK")
+
+    top = curve[-1]
+    payload = {
+        "bench": "engine_micro.run_scale_bench",
+        "config": {"ms": ms, "steps": steps, "chunk_len": chunk_len,
+                   "scenario": "streaming_commuter", "method": "mlmule",
+                   "model": "linear_d8", "backend": jax.default_backend()},
+        "curve": curve,
+        "max_m": top["m"],
+        "steps_per_sec_at_max_m": top["stream_steps_per_sec"],
+        "parity_bitwise_all_m": all(r["parity_bitwise"] for r in curve),
+        "stream_schedule_bytes_at_max_m": top["stream_schedule_bytes"],
+        "materialized_schedule_bytes_at_max_m":
+            top["materialized_schedule_bytes"],
+        "schedule_bytes_ratio": round(
+            top["materialized_schedule_bytes"]
+            / top["stream_schedule_bytes"], 2),
+        "peak_rss_stream_mb_at_max_m": top["peak_rss_stream_mb"],
+        "peak_rss_materialized_mb_at_max_m": top["peak_rss_materialized_mb"],
+        "retraces_new_t": max(r["retraces_new_t"] for r in curve),
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return curve
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
@@ -782,6 +989,13 @@ if __name__ == "__main__":
                     help="run only the encounter-mix benchmark")
     ap.add_argument("--roofline", action="store_true",
                     help="run only the roofline autotune sweep")
+    ap.add_argument("--scale", action="store_true",
+                    help="run only the population-scale curve (streamed vs "
+                         "materialized engine over M, subprocess children "
+                         "for peak-RSS isolation)")
+    ap.add_argument("--scale-child", metavar="JSON",
+                    help="internal: run one (M, mode) scale measurement in "
+                         "this process and print its result line")
     ap.add_argument("--gate-baseline", metavar="DIR",
                     help="after producing artifacts, regression-gate them "
                          "against the committed copies in DIR "
@@ -792,7 +1006,11 @@ if __name__ == "__main__":
     ap.add_argument("--out-churn", default=_DEFAULT_CHURN_OUT)
     ap.add_argument("--out-encounter", default=_DEFAULT_ENC_OUT)
     ap.add_argument("--out-roofline", default=_DEFAULT_ROOF_OUT)
+    ap.add_argument("--out-scale", default=_DEFAULT_SCALE_OUT)
     args = ap.parse_args()
+    if args.scale_child:
+        _scale_child(args.scale_child)
+        raise SystemExit(0)
     produced = []                    # (artifact name, fresh path) per bench
     if args.distributed:
         run_distributed_bench(out_path=args.out_distributed)
@@ -809,6 +1027,9 @@ if __name__ == "__main__":
     elif args.roofline:
         run_roofline_bench(out_path=args.out_roofline)
         produced.append(("BENCH_roofline.json", args.out_roofline))
+    elif args.scale:
+        run_scale_bench(out_path=args.out_scale)
+        produced.append(("BENCH_scale.json", args.out_scale))
     else:
         run()
         run_donation_bench()
@@ -822,6 +1043,8 @@ if __name__ == "__main__":
         produced.append(("BENCH_distributed.json", args.out_distributed))
         run_roofline_bench(out_path=args.out_roofline)
         produced.append(("BENCH_roofline.json", args.out_roofline))
+        run_scale_bench(out_path=args.out_scale)
+        produced.append(("BENCH_scale.json", args.out_scale))
     if args.gate_baseline:
         from benchmarks import bench_gate
         results = [bench_gate.gate_artifact(

@@ -19,7 +19,10 @@ engine; with ``--seeds N > 1`` the replay batches all seeds into one
 vmapped compiled program (``run_sweep_experiment``); with ``--distributed``
 it shards the mule population over a forced host-device mesh instead
 (``run_population_distributed`` — one shard_map'd scan, the peer-encounter
-baselines ring their neighbor search across shards).
+baselines ring their neighbor search across shards); with ``--stream`` the
+colocation schedule is generated chunk-by-chunk inside the compiled replay
+(``run_population_streamed`` — O(chunk*M) schedule memory instead of
+O(T*M), bitwise-identical results, composes with ``--distributed``).
 """
 import argparse
 import os
@@ -69,6 +72,17 @@ def main():
                          "report final accuracy only (in-scan eval reads "
                          "sharded state). Mutually exclusive with "
                          "--seeds > 1.")
+    ap.add_argument("--stream", action="store_true",
+                    help="generate the colocation schedule chunk-by-chunk "
+                         "inside the compiled replay instead of "
+                         "materializing the full [T, M] tensors up front — "
+                         "O(chunk*M) schedule memory instead of O(T*M), "
+                         "bitwise-identical results (run_population_"
+                         "streamed; composes with --distributed). "
+                         "Mutually exclusive with --seeds > 1.")
+    ap.add_argument("--stream-chunk", type=int, default=0,
+                    help="chunk length for --stream (0 = engine default; "
+                         "must be a multiple of the eval cadence)")
     ap.add_argument("--list", action="store_true",
                     help="print the registry and exit")
     args = ap.parse_args()
@@ -80,14 +94,19 @@ def main():
 
     if args.distributed and args.seeds > 1:
         ap.error("--distributed runs one seed; drop --seeds")
+    if args.stream and args.seeds > 1:
+        ap.error("--stream runs one seed; drop --seeds")
 
     spec = SCENARIOS[args.scenario]
     print(f"scenario={spec.name} mode={spec.mode} dist={spec.dist} "
           f"task={spec.task} method={args.method}"
-          + (" [distributed]" if args.distributed else ""))
+          + (" [distributed]" if args.distributed else "")
+          + (" [streamed]" if args.stream else ""))
     cfg = ExperimentConfig(scenario=args.scenario, method=args.method,
                            steps=args.steps, n_mules=args.n_mules,
-                           seed=args.seed, distributed=args.distributed)
+                           seed=args.seed, distributed=args.distributed,
+                           stream=args.stream,
+                           stream_chunk=args.stream_chunk)
 
     if args.seeds > 1:
         seeds = range(args.seed, args.seed + args.seeds)

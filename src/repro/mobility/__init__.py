@@ -3,6 +3,9 @@ from repro.mobility.patterns import (  # noqa: F401
     markov_churn_mask, multi_area_trace, shift_worker_trace)
 from repro.mobility.random_walk import (  # noqa: F401
     MobilityConfig, init_mobility, mobility_step, simulate_trajectories, space_of)
+from repro.mobility.streaming import (  # noqa: F401
+    CommuterStream, CompactColocation, commuter_stream, compact_colocation,
+    materialize_generator)
 from repro.mobility.trace import (  # noqa: F401
     dwell_exchange_flags, synth_foursquare_trace, trace_to_colocation,
     trace_to_colocation_loop)

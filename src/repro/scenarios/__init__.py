@@ -13,14 +13,18 @@ vmap into one compiled program (``sweep.run_sweep``). Scenarios with a
 ``ChurnSpec`` emit an ``"active"`` [T, M] mask in their colocation dict —
 the engine threads it through every path (single-host, sweep, distributed)
 so inactive mules neither train nor exchange; ``SpaceSpec`` tuples give
-spaces heterogeneous exchange tempos.
+spaces heterogeneous exchange tempos. ``run_population_streamed`` +
+``scenario_generator`` replay any registered scenario *without* the
+``[T, M]`` schedule — colocation is generated chunk-by-chunk inside the
+compiled scan (O(chunk·M) memory, bitwise-equal to the materialized path).
 """
 from repro.scenarios.engine import (  # noqa: F401
     jit_cache_clear, jit_cache_stats, run_population,
     run_population_distributed, run_population_distributed_loop,
-    run_population_loop)
+    run_population_loop, run_population_streamed)
 from repro.scenarios.registry import (  # noqa: F401
     SCENARIOS, ChurnSpec, ScenarioSpec, SpaceSpec, get_scenario,
-    list_scenarios, register, trace_colocation, walk_colocation)
+    list_scenarios, register, scenario_generator, trace_colocation,
+    walk_colocation)
 from repro.scenarios.sweep import (  # noqa: F401
     run_sweep, run_sweep_distributed, stack_colocations, stack_trees)

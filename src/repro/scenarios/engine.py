@@ -26,6 +26,24 @@ seed ``vmap`` axis *inside* the shard_map block (i.e. outside the mule
 axis, unsharded), one program per method, bitwise-equal per lane to
 sequential distributed runs.
 
+Streaming replay
+----------------
+``run_population`` scans a *materialized* ``[T, M]`` schedule — at
+M=10^5-10^6 the schedule dwarfs the population state.
+``run_population_streamed`` replaces the precomputed xs with a chunk
+generator (``repro.mobility.streaming``): each compiled dispatch expands
+``chunk_len`` steps of colocation *inside the trace* from O(M)-ish compact
+arrays and scans them, so schedule memory is O(chunk · M) regardless of
+horizon. Its jit cache key hashes the generator signature + chunk shape,
+never ``T`` — one compiled program serves any horizon — and state/last
+buffers are donated per chunk (``donate_argnums=(0, 1)``). Under a mesh
+the generator's arrays shard over the mule axis and each shard expands
+only its own columns: the distributed engine never gathers a global
+schedule. Parity: a streamed replay is bitwise-equal to ``run_population``
+over ``materialize_generator(generator)``, chunk boundaries included,
+because ``_scan_core`` is shared and every step keys off its *global*
+index.
+
 Jit cache
 ---------
 ``run_population`` used to retrace on every call — fine for one replay per
@@ -116,6 +134,20 @@ def _sig(tree: Any) -> Any:
         (tuple(np.shape(l)), np.dtype(jnp.result_type(l)).str) for l in leaves)
 
 
+def _dev(x, dtype) -> jnp.ndarray:
+    """To-device cast that never host-round-trips an existing device array.
+
+    ``jnp.asarray(np.asarray(x))`` copies device arrays back to the host
+    and up again — double-buffering ``[T, M]`` schedules for nothing. A
+    ``jax.Array`` of the right dtype passes through untouched; the wrong
+    dtype casts on device; everything else (numpy, lists) uploads once.
+    """
+    dtype = np.dtype(dtype)
+    if isinstance(x, jax.Array):
+        return x if x.dtype == dtype else x.astype(dtype)
+    return jnp.asarray(np.asarray(x), dtype)
+
+
 def _colocation_tensors(colocation, n_steps=None):
     """Normalize a colocation dict to (fid, exch, pos, area, act) arrays.
 
@@ -123,21 +155,83 @@ def _colocation_tensors(colocation, n_steps=None):
     ``"active"`` key; absent, it defaults to all-ones — the dense
     population. Because the mask is data (same shape/dtype either way), a
     dense and a churned run of the same schedule shape share one compiled
-    replay.
+    replay. Inputs already on device stay on device (no host copy).
     """
-    fid = jnp.asarray(np.asarray(colocation["fixed_id"]), jnp.int32)
-    exch = jnp.asarray(np.asarray(colocation["exchange"]), bool)
+    fid = _dev(colocation["fixed_id"], jnp.int32)
+    exch = _dev(colocation["exchange"], bool)
     t, m = fid.shape[-2], fid.shape[-1]
     pos = colocation.get("pos")
     pos = (jnp.zeros(fid.shape + (2,), jnp.float32) if pos is None
-           else jnp.asarray(np.asarray(pos), jnp.float32))
+           else _dev(pos, jnp.float32))
     area = colocation.get("area")
     area = (jnp.zeros(fid.shape[:-2] + (m,), jnp.int32) if area is None
-            else jnp.asarray(np.asarray(area), jnp.int32))
+            else _dev(area, jnp.int32))
     act = colocation.get("active")
     act = (jnp.ones(fid.shape, bool) if act is None
-           else jnp.asarray(np.asarray(act), bool))
+           else _dev(act, bool))
     return fid, exch, pos, area, act
+
+
+def _scan_core(state, last, fid, exch, pos, area, act, ts, stacked_batches,
+               context, key, *, dynamic: bool, batch_fn, has_context: bool,
+               step_fn, eval_every: Optional[int],
+               eval_fn: Optional[Callable]):
+    """Traceable scan over one contiguous window of the schedule.
+
+    ``ts`` carries the *global* step indices of the window (the streamed
+    path hands in ``t0 + arange(chunk)``), so the per-step
+    ``fold_in(key, t)`` discipline — and with it bitwise parity against a
+    full-horizon replay — is independent of how the horizon is chunked.
+    ``last`` enters as carry for the same reason. Returns
+    ``(state, last_fid, evals-or-None)``.
+    """
+    n_steps = fid.shape[0]
+
+    def body(carry, xs):
+        st, last = carry
+        if dynamic:
+            fid_t, exch_t, pos_t, act_t, t = xs
+            kb, ks = jax.random.split(jax.random.fold_in(key, t))
+            bt = (batch_fn(kb, t, context) if has_context
+                  else batch_fn(kb, t))
+        else:
+            fid_t, exch_t, pos_t, act_t, t, bt = xs
+            ks = jax.random.fold_in(key, t)
+        st = step_fn(st, {"fixed_id": fid_t, "exchange": exch_t,
+                          "pos": pos_t, "area": area, "active": act_t,
+                          "t": t}, bt, ks)
+        last = jnp.where((fid_t >= 0) & act_t, fid_t, last)
+        return (st, last), None
+
+    def xs_slice(lo, hi):
+        xs = (fid[lo:hi], exch[lo:hi], pos[lo:hi], act[lo:hi], ts[lo:hi])
+        if not dynamic:
+            xs = xs + (jax.tree.map(lambda l: l[lo:hi], stacked_batches),)
+        return xs
+
+    carry = (state, last)
+
+    if eval_fn is None or not eval_every:
+        carry, _ = jax.lax.scan(body, carry, xs_slice(0, n_steps))
+        return carry[0], carry[1], None
+
+    ev = ((lambda st, last: eval_fn(st, last, context)) if has_context
+          else eval_fn)
+    n_ev = n_steps // eval_every
+
+    def chunk(carry, xs):
+        carry, _ = jax.lax.scan(body, carry, xs)
+        st, last = carry
+        return carry, ev(st, last)
+
+    head = jax.tree.map(
+        lambda l: l[: n_ev * eval_every].reshape(
+            (n_ev, eval_every) + l.shape[1:]), xs_slice(0, n_steps))
+    carry, evals = jax.lax.scan(chunk, carry, head)
+    if n_ev * eval_every < n_steps:              # trailing partial chunk
+        carry, _ = jax.lax.scan(body, carry,
+                                xs_slice(n_ev * eval_every, n_steps))
+    return carry[0], carry[1], evals
 
 
 def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
@@ -168,54 +262,54 @@ def _build_replay(batches: Any, train_fn: TrainFn, cfg: PopulationConfig, *,
         step_fn = step_builder(area)
         n_mules = fid.shape[1]
         ts = jnp.arange(n_steps, dtype=jnp.int32)
-
-        def body(carry, xs):
-            st, last = carry
-            if dynamic:
-                fid_t, exch_t, pos_t, act_t, t = xs
-                kb, ks = jax.random.split(jax.random.fold_in(key, t))
-                bt = (batch_fn(kb, t, context) if has_context
-                      else batch_fn(kb, t))
-            else:
-                fid_t, exch_t, pos_t, act_t, t, bt = xs
-                ks = jax.random.fold_in(key, t)
-            st = step_fn(st, {"fixed_id": fid_t, "exchange": exch_t,
-                              "pos": pos_t, "area": area, "active": act_t,
-                              "t": t}, bt, ks)
-            last = jnp.where((fid_t >= 0) & act_t, fid_t, last)
-            return (st, last), None
-
-        def xs_slice(lo, hi):
-            xs = (fid[lo:hi], exch[lo:hi], pos[lo:hi], act[lo:hi], ts[lo:hi])
-            if not dynamic:
-                xs = xs + (jax.tree.map(lambda l: l[lo:hi], stacked_batches),)
-            return xs
-
-        carry = (state, jnp.zeros((n_mules,), jnp.int32))
-
-        if eval_fn is None or not eval_every:
-            carry, _ = jax.lax.scan(body, carry, xs_slice(0, n_steps))
-            return carry[0], carry[1], None
-
-        ev = ((lambda st, last: eval_fn(st, last, context)) if has_context
-              else eval_fn)
-        n_ev = n_steps // eval_every
-
-        def chunk(carry, xs):
-            carry, _ = jax.lax.scan(body, carry, xs)
-            st, last = carry
-            return carry, ev(st, last)
-
-        head = jax.tree.map(
-            lambda l: l[: n_ev * eval_every].reshape(
-                (n_ev, eval_every) + l.shape[1:]), xs_slice(0, n_steps))
-        carry, evals = jax.lax.scan(chunk, carry, head)
-        if n_ev * eval_every < n_steps:              # trailing partial chunk
-            carry, _ = jax.lax.scan(body, carry,
-                                    xs_slice(n_ev * eval_every, n_steps))
-        return carry[0], carry[1], evals
+        last = jnp.zeros((n_mules,), jnp.int32)
+        return _scan_core(state, last, fid, exch, pos, area, act, ts,
+                          stacked_batches, context, key, dynamic=dynamic,
+                          batch_fn=batch_fn, has_context=has_context,
+                          step_fn=step_fn, eval_every=eval_every,
+                          eval_fn=eval_fn)
 
     return replay
+
+
+def _build_chunk_replay(generator, batches: Any, train_fn: TrainFn,
+                        cfg: PopulationConfig, *, method: str,
+                        eval_every: Optional[int],
+                        eval_fn: Optional[Callable], chunk_len: int,
+                        has_context: bool,
+                        step_builder: Optional[Callable] = None) -> Callable:
+    """Un-jitted streamed-chunk core ``(state, last, t0, gen_arrays,
+    stacked_chunk, context, key) -> (state, last_fid, evals)``.
+
+    The colocation slice is *generated inside the trace*: the generator's
+    ``expand`` runs on its array pytree (a traced input — under
+    ``shard_map`` each shard holds and expands only its own mule columns)
+    at global steps ``t0 .. t0+chunk_len``, feeding the same ``_scan_core``
+    the materialized path scans. Only the generator's *static* config is
+    closed over, so one compiled program serves every same-shape chunk of
+    every same-signature generator, whatever the horizon.
+    """
+    dynamic = callable(batches)
+    batch_fn = batches if dynamic else None
+    if step_builder is None:
+        step_builder = lambda area: make_method_step(method, train_fn, cfg,
+                                                     area)
+
+    def chunk_replay(state, last, t0, gen_arrays, stacked_chunk, context,
+                     key):
+        _STATS["traces"] += 1          # python side effect: fires per trace
+        ts = jnp.asarray(t0, jnp.int32) + jnp.arange(chunk_len,
+                                                     dtype=jnp.int32)
+        co = generator.expand(gen_arrays, None, t0, chunk_len)
+        step_fn = step_builder(co["area"])
+        return _scan_core(state, last, co["fixed_id"], co["exchange"],
+                          co["pos"], co["area"], co["active"], ts,
+                          stacked_chunk, context, key, dynamic=dynamic,
+                          batch_fn=batch_fn, has_context=has_context,
+                          step_fn=step_fn, eval_every=eval_every,
+                          eval_fn=eval_fn)
+
+    return chunk_replay
 
 
 def _distributed_specs(state, batches, dcfg, *, vmapped: bool):
@@ -317,6 +411,184 @@ def get_compiled_replay(state, fid, exch, pos, area, act, batches, context,
     while len(_JIT_CACHE) > _JIT_CACHE_MAX:
         _JIT_CACHE.popitem(last=False)
     return fn
+
+
+def _streamed_specs(state, generator, batches, dcfg):
+    """shard_map in/out PartitionSpecs for the streamed chunk replay.
+
+    Argument order mirrors ``_build_chunk_replay``: (state, last, t0,
+    gen_arrays, stacked_chunk, context, key). Mule-population leaves and
+    the generator's mule-leading arrays (its ``specs`` method knows which)
+    shard over ``dcfg.data_axis``; ``t0``/context/key replicate.
+    """
+    from jax.sharding import PartitionSpec as P
+    ax = dcfg.data_axis
+
+    def subtree(tree, spec):
+        return jax.tree.map(lambda _: spec, tree)
+
+    state_specs = {
+        k: subtree(v, P(ax) if k in ("mule_models", "mule_ts") else P())
+        for k, v in state.items()
+    }
+    if callable(batches) or batches is None:
+        batch_specs = P()
+    else:
+        batch_specs = {
+            k: subtree(v, P(None, ax) if k == "mule" else P())
+            for k, v in batches.items()
+        }
+    in_specs = (state_specs, P(ax), P(), generator.specs(ax), batch_specs,
+                P(), P())
+    out_specs = (state_specs, P(ax), P())
+    return in_specs, out_specs
+
+
+def get_compiled_chunk_replay(state, generator, gen_arrays, batches, context,
+                              key, train_fn: TrainFn, cfg: PopulationConfig,
+                              *, method: str, eval_every: Optional[int],
+                              eval_fn: Optional[Callable], chunk_len: int,
+                              stacked_chunk: Any = None, donate: bool = True,
+                              mesh=None, dcfg=None) -> Callable:
+    """Fetch (or build + memoize) the jitted streamed-chunk replay.
+
+    The cache key is deliberately **horizon-free**: it hashes the
+    generator's *class + static_token() + array signature* and the chunk
+    shape, never ``n_steps`` or ``t0`` — so replaying 10^3 or 10^7 steps
+    through the same generator family compiles exactly one program per
+    distinct chunk length (the tail chunk, when ``n_steps % chunk_len``,
+    is the one extra entry). ``donate=True`` (the default here — streaming
+    exists for populations too big to copy) donates *state and last_fid*
+    (``donate_argnums=(0, 1)``), so the carry ping-pongs through the same
+    buffers across the whole chunk loop.
+    """
+    dynamic = callable(batches)
+    kind = "stream_distributed" if mesh is not None else "stream"
+    cache_key = (
+        kind, method, cfg, eval_every, chunk_len,
+        type(generator).__qualname__, generator.static_token(),
+        train_fn, eval_fn, batches if dynamic else None,
+        _sig(state), _sig(gen_arrays),
+        None if dynamic else _sig(stacked_chunk),
+        None if context is None else _sig(context), _sig(key),
+        donate, None if mesh is None else (mesh, dcfg),
+    )
+    fn = _JIT_CACHE.get(cache_key)
+    if fn is not None:
+        _STATS["hits"] += 1
+        _JIT_CACHE.move_to_end(cache_key)
+        return fn
+    _STATS["misses"] += 1
+    step_builder = None
+    if mesh is not None:
+        from repro.core.distributed import make_distributed_method_step
+        dist_step = make_distributed_method_step(method, train_fn, dcfg,
+                                                 mesh=mesh)
+        step_builder = lambda area: dist_step
+    core = _build_chunk_replay(generator, batches, train_fn, cfg,
+                               method=method, eval_every=eval_every,
+                               eval_fn=eval_fn, chunk_len=chunk_len,
+                               has_context=context is not None,
+                               step_builder=step_builder)
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        in_specs, out_specs = _streamed_specs(state, generator, batches,
+                                              dcfg)
+        core = shard_map(core, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    fn = jax.jit(core, donate_argnums=(0, 1) if donate else ())
+    _JIT_CACHE[cache_key] = fn
+    while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+        _JIT_CACHE.popitem(last=False)
+    return fn
+
+
+def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
+                            train_fn: TrainFn, cfg: PopulationConfig, key, *,
+                            n_steps: Optional[int] = None,
+                            chunk_len: int = 64,
+                            eval_every: Optional[int] = None,
+                            eval_fn: Optional[Callable] = None,
+                            method: str = "mlmule", context: Any = None,
+                            donate: bool = True, mesh=None, dcfg=None
+                            ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """``run_population`` without the ``[T, M]`` schedule: colocation is
+    generated chunk-by-chunk *inside* the compiled replay.
+
+    generator: a chunk generator (``repro.mobility.streaming``) —
+               ``compact_colocation(...)`` streams any registered
+               scenario's schedule from per-mule RLE segments;
+               ``commuter_stream(...)`` is fully procedural (O(M) memory,
+               any horizon). Schedule memory is O(chunk_len · M) live
+               slices plus the generator's compact arrays, never O(T · M).
+    n_steps:   horizon; defaults to ``generator.n_steps``.
+    chunk_len: steps generated + scanned per compiled dispatch. Must be a
+               multiple of ``eval_every`` when ``eval_fn`` is set (so
+               evals land on the same global steps as the materialized
+               engine). Bigger chunks amortize dispatch; smaller chunks
+               shrink the live schedule slice.
+    donate:    default **True** (unlike ``run_population``): state and
+               ``last_fid`` buffers are donated each chunk and rebound,
+               so the population updates in place for the whole run. Pass
+               ``False`` when replaying the same input state again.
+    mesh/dcfg: run distributed — the generator expands *shard-locally*
+               under ``shard_map`` (each shard computes only its own mule
+               columns; no global schedule is ever gathered). ``dcfg`` is
+               required with a mesh; ``mesh=None`` with a ``dcfg`` picks
+               one like ``run_population_distributed``. ``cfg`` is
+               ignored in favor of ``dcfg.pop`` when ``dcfg`` is set.
+
+    Everything else (batches/eval/method/context contracts, the returned
+    ``(final_state, aux)``) matches ``run_population`` — and so do the
+    results: a streamed replay is bitwise-equal to the materialized engine
+    over ``materialize_generator(generator)``, chunk boundaries included
+    (the global-step key discipline makes chunking invisible).
+    """
+    if mesh is not None and dcfg is None:
+        raise ValueError("run_population_streamed: mesh requires dcfg")
+    if key is None:
+        raise TypeError("run_population_streamed() missing required "
+                        "argument: 'key'")
+    pcfg = dcfg.pop if dcfg is not None else cfg
+    n_steps = int(generator.n_steps if n_steps is None else n_steps)
+    n_mules = int(generator.n_mules)
+    if chunk_len <= 0:
+        raise ValueError(f"chunk_len={chunk_len} must be positive")
+    if eval_fn is not None and eval_every and chunk_len % eval_every:
+        raise ValueError(
+            f"chunk_len={chunk_len} must be a multiple of "
+            f"eval_every={eval_every} so streamed evals land on the same "
+            f"global steps as the materialized engine")
+    if dcfg is not None:
+        if mesh is None:
+            mesh = _auto_mesh(method, n_mules, dcfg)
+        _check_mule_sharding(n_mules, mesh, dcfg)
+    gen_arrays = generator.arrays()
+    dynamic = callable(batches)
+    last = jnp.zeros((n_mules,), jnp.int32)
+    evals_chunks = []
+    for t0 in range(0, n_steps, chunk_len):
+        cl = min(chunk_len, n_steps - t0)
+        stacked_chunk = (None if dynamic else
+                         jax.tree.map(lambda l: l[t0:t0 + cl], batches))
+        fn = get_compiled_chunk_replay(
+            state, generator, gen_arrays, batches, context, key, train_fn,
+            pcfg, method=method, eval_every=eval_every, eval_fn=eval_fn,
+            chunk_len=cl, stacked_chunk=stacked_chunk, donate=donate,
+            mesh=mesh, dcfg=dcfg)
+        state, last, ev = fn(state, last, jnp.asarray(t0, jnp.int32),
+                             gen_arrays, stacked_chunk, context, key)
+        if ev is not None:
+            evals_chunks.append(ev)
+    n_ev = n_steps // eval_every if (eval_fn is not None and eval_every) else 0
+    steps = (np.arange(n_ev) + 1) * eval_every - 1 if n_ev else \
+        np.zeros((0,), int)
+    evals = None
+    if evals_chunks:
+        evals = (evals_chunks[0] if len(evals_chunks) == 1 else
+                 jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                              *evals_chunks))
+    return state, {"last_fid": last, "eval_steps": steps, "evals": evals}
 
 
 def run_population(state: Dict[str, Any], colocation: Dict[str, Any],

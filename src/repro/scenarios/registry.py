@@ -30,10 +30,11 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.mobility import (MobilityConfig, commuter_trace,
-                            duty_cycle_mask, dwell_exchange_flags,
-                            event_crowd_trace, flash_churn_mask,
-                            init_mobility, markov_churn_mask,
+from repro.mobility import (MobilityConfig, commuter_stream, commuter_trace,
+                            compact_colocation, duty_cycle_mask,
+                            dwell_exchange_flags, event_crowd_trace,
+                            flash_churn_mask, init_mobility,
+                            markov_churn_mask, materialize_generator,
                             multi_area_trace, shift_worker_trace,
                             simulate_trajectories, space_of,
                             synth_foursquare_trace, trace_to_colocation)
@@ -96,6 +97,10 @@ class ScenarioSpec:
     n_fixed: int = 8                        # spaces (= valid fixed ids)
     churn: Optional[ChurnSpec] = None       # device join/leave mask
     spaces: Tuple[SpaceSpec, ...] = ()      # per-space exchange tempos
+    # native chunk generator (seed, n_mules, n_steps) -> ChunkGenerator for
+    # run_population_streamed; scenarios without one stream through
+    # compact_colocation (see scenario_generator)
+    generator: Optional[Callable] = None
     description: str = ""
 
 
@@ -138,6 +143,27 @@ def get_scenario(name: str) -> ScenarioSpec:
 
 def list_scenarios():
     return sorted(SCENARIOS)
+
+
+def scenario_generator(name_or_spec, seed: int, n_mules: int, n_steps: int,
+                       colocation: Optional[Colocation] = None):
+    """Chunk generator for a scenario — native or compacted.
+
+    A spec with a native ``generator`` (procedural, O(M) memory, any
+    horizon) builds it directly. Every other scenario streams through
+    :func:`repro.mobility.compact_colocation`: its materialized schedule
+    (pass ``colocation`` to reuse one already built, else the spec builds
+    it here) is losslessly RLE-compacted, with the spec's per-space tempos
+    as the dwell cadence — so the on-device expansion is bitwise-equal to
+    the host tensors for *every* registered scenario.
+    """
+    spec = name_or_spec if isinstance(name_or_spec, ScenarioSpec) \
+        else get_scenario(name_or_spec)
+    if spec.generator is not None:
+        return spec.generator(seed, n_mules, n_steps)
+    if colocation is None:
+        colocation = spec.colocation(seed, n_mules, n_steps)
+    return compact_colocation(colocation, cadence=_cadence(spec.spaces))
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +306,30 @@ register(ScenarioSpec(
     mode="mobile", dist="shards", task="har",
     description="IMU HAR with rotating crews: LSTM-CNN models relay "
                 "between workplaces shift by shift."))
+
+
+# -- streaming-native scenarios ---------------------------------------------
+
+def _streaming_commuter_colocation(seed: int, n_mules: int,
+                                   n_steps: int) -> Colocation:
+    """Materialized reference of the procedural commuter stream.
+
+    The generator is the source of truth; this builder expands it so every
+    materialized engine path (and the parity tests) sees the identical
+    schedule the streamed replay generates on device.
+    """
+    return materialize_generator(commuter_stream(seed, n_mules, n_steps))
+
+
+register(ScenarioSpec(
+    name="streaming_commuter",
+    colocation=_streaming_commuter_colocation,
+    mode="mobile", dist="shards",
+    generator=commuter_stream,
+    description="Procedural commuter schedule generated inside the compiled "
+                "scan (per-mule home/work/jitter params, O(M) memory at any "
+                "horizon) — the native workload of run_population_streamed "
+                "and the M=10^5+ scale sweep."))
 
 
 register(ScenarioSpec(
