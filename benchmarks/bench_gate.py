@@ -102,12 +102,21 @@ ARTIFACTS: Dict[str, ArtifactSchema] = {
                   "ring_vs_host_unpruned": float,
                   "hops_executed": int, "hops_pruned": int,
                   "payload_bytes_per_exchange": float,
-                  "bucket_locality_fraction": float},
+                  "bucket_locality_fraction": float,
+                  "area_bits_collision_rate": float,
+                  "rebucket_every": int, "rebucket_threshold": float,
+                  "rebucket_checks": int, "rebucket_swaps": int,
+                  "prune_rate_q1_on": float, "prune_rate_q4_on": float,
+                  "prune_rate_q1_off": float, "prune_rate_q4_off": float,
+                  "rebucket_prune_retention": float},
         headline="speedup_tiled_vs_dense", higher_is_better=True,
         # the locality-aware ring ratchets alongside the tiled kernel: the
         # bench runs both the pruned and unpruned ring variants and this
-        # gates the pruned ring's speedup over the single-host path
-        extra_headlines=(("ring_vs_host", True, 0.0),)),
+        # gates the pruned ring's speedup over the single-host path; the
+        # migration rows (run_migration_bench merges them in) ratchet the
+        # re-bucketing retention ratio so hop-prune decay can't creep back
+        extra_headlines=(("ring_vs_host", True, 0.0),
+                         ("rebucket_prune_retention", True, 0.0))),
     "BENCH_scale.json": ArtifactSchema(
         bench="engine_micro.run_scale_bench",
         required={"curve": list, "max_m": int,

@@ -75,6 +75,10 @@ class ExperimentConfig:
                                    # results are bitwise-identical
     stream_chunk: int = 0          # steps per streamed chunk (0 = auto:
                                    # eval_every when evals run, else 64)
+    rebucket_every: int = 0        # distributed runs: drift-check cadence of
+                                   # mid-run re-bucketing (0 = off; must be a
+                                   # multiple of the streamed chunk length)
+    rebucket_threshold: float = 0.25   # drift fraction that triggers a swap
 
 
 # ---------------------------------------------------------------------------
@@ -405,12 +409,15 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
             from repro.core.distributed import (DistributedConfig,
                                                 to_distributed_state)
             from repro.scenarios import run_population_distributed
-            dcfg = DistributedConfig(pop=pcfg)
+            dcfg = DistributedConfig(pop=pcfg,
+                                     rebucket_every=cfg.rebucket_every,
+                                     rebucket_threshold=cfg.rebucket_threshold)
             mesh = _mule_mesh(cfg.n_mules)
             dist_eval = cfg.mode == "fixed"
             if cfg.stream:
-                chunk = cfg.stream_chunk or (cfg.eval_every if dist_eval
-                                             else 64)
+                chunk = cfg.stream_chunk or (
+                    cfg.rebucket_every or
+                    (cfg.eval_every if dist_eval else 64))
                 pop, aux = run_population_streamed(
                     to_distributed_state(pop, dcfg), generator, batch_fn,
                     train_fn, pcfg, ke, n_steps=cfg.steps, chunk_len=chunk,

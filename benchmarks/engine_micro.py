@@ -36,6 +36,13 @@ matrix + per-leaf ``masked_group_mean``; the tiled warm step must win),
 plus ring-sharded vs single-host warm gossip replays on the forced
 host-device mesh. Results land in ``BENCH_encounter.json``.
 
+``run_migration_bench()`` — long-trace hop-prune decay: the exact host
+mirror of the ring's pruning predicate on a persistent-relocation area
+trace, with build-time bucketing only vs the drift-triggered mid-run
+re-bucketing rule; asserts the re-bucketed prune rate holds into the
+final quartile and merges retention telemetry into
+``BENCH_encounter.json`` (run after ``--encounter``).
+
 ``run_donation_bench()`` — compile-time memory deltas of donating the
 state pytree to the cached replay (``run_population(..., donate=True)``):
 XLA aliases the state buffers into the outputs, so steady-state peak drops
@@ -383,7 +390,8 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
     import dataclasses
 
     import numpy as np
-    from repro.baselines.gossip import (encounter_matrix,
+    from repro.baselines.gossip import (area_bit_collision_rate,
+                                        encounter_matrix,
                                         flatten_population, ring_hop_mask,
                                         unflatten_population)
     from repro.core.aggregation import masked_group_mean
@@ -535,6 +543,9 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
                      * m_loc * (8 + 4 + 1 + 4 * rd)
                      + n_shards * n_shards * 32 * 4)
     locality = bucket_locality_fraction(co_ring["area"], n_shards)
+    # effective predicate width this run resolves to (ring_bits=0 -> auto)
+    ring_bits = 64 if int(co_ring["area"].max()) >= 32 else 32
+    collision = area_bit_collision_rate(co_ring["area"], n_bits=ring_bits)
 
     rows = [
         (f"encounter.dense_warm.M{m}", dense_s, "s (median)"),
@@ -554,6 +565,8 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
         (f"encounter.payload_bytes", payload_bytes, "B per exchange step"),
         (f"encounter.bucket_locality", locality,
          "fraction of same-area pairs shard-local"),
+        (f"encounter.area_bits_collision.b{ring_bits}", collision,
+         "fraction of areas sharing a summary bit"),
     ]
     for name, val, derived in rows:
         print(f"{name},{val:.4f},{derived}")
@@ -579,7 +592,144 @@ def run_encounter_bench(n_mules: int = 8192, reps: int = 5,
         "hops_pruned": hops_pruned,
         "payload_bytes_per_exchange": float(payload_bytes),
         "bucket_locality_fraction": round(locality, 4),
+        "area_bits_collision_rate": round(collision, 4),
     }
+    # the long-trace migration bench merges its re-bucketing telemetry into
+    # this same artifact; keep those keys when re-running only this half
+    try:
+        with open(out_path) as f:
+            prior = json.load(f)
+        payload.update({k: prior[k] for k in _MIGRATION_KEYS if k in prior})
+    except (OSError, ValueError):
+        pass
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    return rows
+
+
+_MIGRATION_KEYS = (
+    "rebucket_every", "rebucket_threshold", "rebucket_checks",
+    "rebucket_swaps", "prune_rate_q1_on", "prune_rate_q4_on",
+    "prune_rate_q1_off", "prune_rate_q4_off", "rebucket_prune_retention",
+)
+
+
+def run_migration_bench(n_mules: int = 512, n_steps: int = 4096,
+                        n_shards: int = 16, rebucket_every: int = 64,
+                        threshold: float = 0.001,
+                        out_path: str = _DEFAULT_ENC_OUT):
+    """Long-trace migration: hop-prune rate over time, re-bucketing on/off.
+
+    Replays a persistent-relocation area trace (``2 * n_shards`` cities so
+    bucketing has pruning headroom; 1-in-8 mules permanently moves to a
+    random other city at a random step — the paper's rare inter-area
+    traveler made permanent, the regime where build-time bucketing decays
+    but re-bucketing recovers; round-trip travel visits never prune at any
+    cadence because ~a quarter of the population is instantaneously away
+    from its bucket) through the *exact* host-side mirror of the ring's
+    pruning predicate (``ring_hop_mask`` semantics, vectorized over steps,
+    64-bit masks since 32 areas overflow 32 bits) under two shard layouts:
+
+    - **off** — the PR-7 behavior: mules bucket-ordered once at build time;
+      as the population migrates the shard/area alignment decays and the
+      prune rate drifts toward zero (every hop executed);
+    - **on** — the drift-check + argsort swap rule the engine drivers run
+      (same cadence, same threshold, same stable re-sort), applied at every
+      ``rebucket_every`` boundary.
+
+    Telemetry is deterministic (no timing): per-quartile mean prune rates
+    for both layouts, swap/check counts, and the retention ratio
+    ``prune_rate_q4_on / prune_rate_q1_on`` — gated by ``bench_gate`` so a
+    future change that lets the decay back in fails the lane. Keys merge
+    into ``BENCH_encounter.json`` next to the ring-vs-host rows (run this
+    after ``--encounter``, which rewrites the file).
+    """
+    import numpy as np
+    from repro.core.distributed import bucket_mule_order
+
+    out_path = os.path.abspath(out_path)
+    n_areas = 2 * n_shards
+    rng = np.random.default_rng(0)
+    home = np.repeat(np.arange(n_areas), n_mules // n_areas).astype(np.int32)
+    area_t = np.broadcast_to(home, (n_steps, n_mules)).copy()   # [T, M]
+    for m in rng.choice(n_mules, n_mules // 8, replace=False):
+        t_move = int(rng.integers(rebucket_every // 2, n_steps))
+        area_t[t_move:, m] = (area_t[t_move - 1, m]
+                              + int(rng.integers(1, n_areas))) % n_areas
+    n_bits = 64 if int(area_t.max()) >= 32 else 32
+
+    def prune_rates(area_rows):
+        """[T, M] bucketed area rows -> [T] prune rate, hops_needed math."""
+        t_len, m = area_rows.shape
+        blocks = area_rows.reshape(t_len, n_shards, m // n_shards)
+        hit = blocks[..., None] % n_bits == np.arange(n_bits)
+        bits = hit.any(axis=2)                           # [T, S, n_bits]
+        need = np.stack([(bits & np.roll(bits, s, axis=1)).any(axis=(1, 2))
+                         for s in range(n_shards)], axis=1)
+        return (n_shards - need.sum(axis=1)) / (n_shards - 1)
+
+    order0 = bucket_mule_order(area_t)
+    off = prune_rates(area_t[:, order0])
+
+    # the driver's rule, replayed on the host: drift check at every
+    # rebucket_every boundary, stable re-sort + re-baseline past threshold
+    on = np.empty(n_steps)
+    order = order0.copy()
+    bucket_area = area_t[0][order]
+    checks = swaps = 0
+    for t0 in range(0, n_steps, rebucket_every):
+        w = slice(t0, min(t0 + rebucket_every, n_steps))
+        on[w] = prune_rates(area_t[w][:, order])
+        t_end = w.stop
+        if t_end < n_steps:
+            checks += 1
+            area_now = area_t[t_end - 1][order]
+            if (area_now != bucket_area).mean() > threshold:
+                step = np.argsort(area_now, kind="stable")
+                if not np.array_equal(step, np.arange(n_mules)):
+                    order = order[step]
+                    swaps += 1
+                bucket_area = area_now[step]
+
+    def quartiles(x):
+        return [float(q.mean()) for q in np.array_split(x, 4)]
+
+    q_on, q_off = quartiles(on), quartiles(off)
+    retention = q_on[3] / q_on[0] if q_on[0] else 1.0
+    rows = [
+        ("migration.prune_rate_q1.on", q_on[0], "first-quartile mean"),
+        ("migration.prune_rate_q4.on", q_on[3],
+         f"final-quartile mean ({swaps} swaps / {checks} checks)"),
+        ("migration.prune_rate_q1.off", q_off[0], "first-quartile mean"),
+        ("migration.prune_rate_q4.off", q_off[3],
+         "final-quartile mean (build-time bucketing only)"),
+        ("migration.retention.on", retention, "q4/q1, gated"),
+    ]
+    for name, val, derived in rows:
+        print(f"{name},{val:.4f},{derived}")
+    assert q_on[3] >= 0.9 * q_on[0], \
+        f"re-bucketing failed to hold the prune rate: q1={q_on[0]:.3f} " \
+        f"q4={q_on[3]:.3f}"
+
+    with open(out_path) as f:
+        payload = json.load(f)
+    payload["config"]["migration"] = {
+        "n_mules": n_mules, "n_steps": n_steps, "n_shards": n_shards,
+        "n_areas": n_areas, "n_bits": n_bits,
+        "scenario": "persistent-relocation [T, M] area trace"}
+    payload.update({
+        "rebucket_every": rebucket_every,
+        "rebucket_threshold": threshold,
+        "rebucket_checks": checks,
+        "rebucket_swaps": swaps,
+        "prune_rate_q1_on": round(q_on[0], 4),
+        "prune_rate_q4_on": round(q_on[3], 4),
+        "prune_rate_q1_off": round(q_off[0], 4),
+        "prune_rate_q4_off": round(q_off[3], 4),
+        "rebucket_prune_retention": round(retention, 4),
+    })
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")
@@ -987,6 +1137,11 @@ if __name__ == "__main__":
                     help="run only the churn-mask overhead benchmark")
     ap.add_argument("--encounter", action="store_true",
                     help="run only the encounter-mix benchmark")
+    ap.add_argument("--migration", action="store_true",
+                    help="run only the long-trace migration benchmark "
+                         "(hop-prune rate over time with mid-run "
+                         "re-bucketing on vs off; merges telemetry into "
+                         "the encounter artifact — run after --encounter)")
     ap.add_argument("--roofline", action="store_true",
                     help="run only the roofline autotune sweep")
     ap.add_argument("--scale", action="store_true",
@@ -1024,6 +1179,9 @@ if __name__ == "__main__":
     elif args.encounter:
         run_encounter_bench(out_path=args.out_encounter)
         produced.append(("BENCH_encounter.json", args.out_encounter))
+    elif args.migration:
+        run_migration_bench(out_path=args.out_encounter)
+        produced.append(("BENCH_encounter.json", args.out_encounter))
     elif args.roofline:
         run_roofline_bench(out_path=args.out_roofline)
         produced.append(("BENCH_roofline.json", args.out_roofline))
@@ -1038,6 +1196,7 @@ if __name__ == "__main__":
         run_churn_bench(out_path=args.out_churn)
         produced.append(("BENCH_churn.json", args.out_churn))
         run_encounter_bench(out_path=args.out_encounter)
+        run_migration_bench(out_path=args.out_encounter)
         produced.append(("BENCH_encounter.json", args.out_encounter))
         run_distributed_bench(out_path=args.out_distributed)
         produced.append(("BENCH_distributed.json", args.out_distributed))

@@ -83,6 +83,18 @@ def main():
     ap.add_argument("--stream-chunk", type=int, default=0,
                     help="chunk length for --stream (0 = engine default; "
                          "must be a multiple of the eval cadence)")
+    ap.add_argument("--rebucket-every", type=int, default=0,
+                    help="distributed runs: re-check the shard/area "
+                         "alignment every N steps and re-bucket the mule "
+                         "population when the drift fraction crosses "
+                         "--rebucket-threshold (0 = off; must be a "
+                         "multiple of --stream-chunk so swaps land on "
+                         "chunk boundaries). Keeps the ring's hop pruning "
+                         "effective on migratory scenarios "
+                         "(multi_area_migratory).")
+    ap.add_argument("--rebucket-threshold", type=float, default=0.25,
+                    help="drifted-mule fraction that triggers a re-bucket "
+                         "swap (see --rebucket-every)")
     ap.add_argument("--list", action="store_true",
                     help="print the registry and exit")
     args = ap.parse_args()
@@ -96,6 +108,17 @@ def main():
         ap.error("--distributed runs one seed; drop --seeds")
     if args.stream and args.seeds > 1:
         ap.error("--stream runs one seed; drop --seeds")
+    if args.rebucket_every:
+        if not args.distributed:
+            ap.error("--rebucket-every re-buckets the sharded population; "
+                     "add --distributed")
+        if args.stream_chunk and args.rebucket_every % args.stream_chunk:
+            # validated here, before any device work: a misaligned cadence
+            # would otherwise only surface once the engine builds chunks
+            raise ValueError(
+                f"--rebucket-every={args.rebucket_every} must be a "
+                f"multiple of --stream-chunk={args.stream_chunk} so "
+                "re-bucketing lands on chunk boundaries")
 
     spec = SCENARIOS[args.scenario]
     print(f"scenario={spec.name} mode={spec.mode} dist={spec.dist} "
@@ -106,7 +129,9 @@ def main():
                            steps=args.steps, n_mules=args.n_mules,
                            seed=args.seed, distributed=args.distributed,
                            stream=args.stream,
-                           stream_chunk=args.stream_chunk)
+                           stream_chunk=args.stream_chunk,
+                           rebucket_every=args.rebucket_every,
+                           rebucket_threshold=args.rebucket_threshold)
 
     if args.seeds > 1:
         seeds = range(args.seed, args.seed + args.seeds)

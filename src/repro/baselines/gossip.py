@@ -18,7 +18,7 @@ block straight from shard ``(i - s) % n`` (``shift_perm``), one
 happens once at the end — so no shard ever sees the full [M, M] matrix
 either. Because the hops are independent shifts of the same block (not a
 chained forward), the ring is locality-aware: each shard publishes a
-32-bit area-set summary (one tiny psum per exchange), and every remote
+32- or 64-bit area-set summary (one tiny psum per exchange), and every remote
 hop whose source/destination area sets provably cannot intersect skips
 both its payload ``ppermute`` and its block compute under ``lax.cond`` —
 a pruned hop would have contributed exactly zero, so the pruned and
@@ -57,11 +57,16 @@ class RingSpec:
     ``axis_name`` is the shard_map mule axis; ``axis_size`` its static size
     (the ring unrolls one ``ppermute`` hop per shard). ``prune`` enables
     the area-bitmask hop pruning — exact, so it is on by default; the
-    benchmarks flip it off to measure the dense ring.
+    benchmarks flip it off to measure the dense ring. ``n_bits`` is the
+    area-summary mask width: area ids fold with ``% n_bits``, so runs with
+    more than ``n_bits`` distinct areas alias bits and lose pruning power
+    (never soundness) — the drivers widen to 64 automatically when area
+    ids overflow 32 (``DistributedConfig.ring_bits``).
     """
     axis_name: str
     axis_size: int
     prune: bool = True
+    n_bits: int = N_AREA_BITS
 
     def perm(self) -> List[Tuple[int, int]]:
         return [(s, (s + 1) % self.axis_size) for s in range(self.axis_size)]
@@ -102,7 +107,8 @@ def hops_needed(all_bits: jnp.ndarray) -> jnp.ndarray:
 
 
 def ring_hop_mask(area: jnp.ndarray, active: Optional[jnp.ndarray],
-                  n_shards: int) -> jnp.ndarray:
+                  n_shards: int,
+                  n_bits: int = N_AREA_BITS) -> jnp.ndarray:
     """Host-side mirror of the in-ring pruning predicate.
 
     Splits the global ``area``/``active`` rows into ``n_shards`` equal
@@ -116,8 +122,28 @@ def ring_hop_mask(area: jnp.ndarray, active: Optional[jnp.ndarray],
         sl = slice(k * m_loc, (k + 1) * m_loc)
         blocks.append(area_bits(jnp.asarray(area)[sl],
                                 None if active is None
-                                else jnp.asarray(active)[sl]))
+                                else jnp.asarray(active)[sl],
+                                n_bits=n_bits))
     return hops_needed(jnp.stack(blocks))
+
+
+def area_bit_collision_rate(area, n_bits: int = N_AREA_BITS) -> float:
+    """Fraction of distinct area ids that share their summary bit with
+    another distinct id under the ``% n_bits`` fold.
+
+    0.0 means the bitmask separates every area (pruning at full power);
+    anything above it measures how much the fold blunts the predicate —
+    aliased areas can only *retain* hops, never prune a needed one, so
+    this is a telemetry number, not a soundness concern. Recorded per run
+    in the encounter-bench ring telemetry.
+    """
+    u = np.unique(np.asarray(area))
+    if u.size == 0:
+        return 0.0
+    bits = u % n_bits
+    _, counts = np.unique(bits, return_counts=True)
+    collided = int(counts[counts > 1].sum())
+    return float(collided) / float(u.size)
 
 
 def _ring_need(area, act, ring: RingSpec) -> jnp.ndarray:
@@ -129,7 +155,7 @@ def _ring_need(area, act, ring: RingSpec) -> jnp.ndarray:
     """
     n = ring.axis_size
     i = jax.lax.axis_index(ring.axis_name)
-    bits = area_bits(area, act)
+    bits = area_bits(area, act, n_bits=ring.n_bits)
     mine = ((jnp.arange(n) == i).astype(jnp.float32)[:, None]
             * bits.astype(jnp.float32)[None, :])
     all_bits = jax.lax.psum(mine, ring.axis_name) > 0

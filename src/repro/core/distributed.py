@@ -69,6 +69,19 @@ class DistributedConfig:
     # area-bitmask hop pruning of the peer-exchange ring (exact — a pruned
     # hop would contribute nothing; False measures the dense ring)
     ring_prune: bool = True
+    # ring area-bitmask width. 0 = auto: 32 bits, widened to 64 when the
+    # run's max area id needs it (>32 areas alias under a 32-bit fold and
+    # quietly stop pruning). The drivers resolve 0 to a concrete width
+    # before the value enters any jit cache key.
+    ring_bits: int = 0
+    # mid-run re-bucketing: every `rebucket_every` steps (chunk-aligned on
+    # the streamed engine) the compiled replay emits the psum'd fraction of
+    # mules whose current area drifted off their bucket area; when it
+    # crosses `rebucket_threshold` the driver recomputes the bucket order
+    # and permutes the full live mule state + in-flight colocation columns
+    # through the mesh. 0 = off (build-time bucketing only, PR 7 behavior).
+    rebucket_every: int = 0
+    rebucket_threshold: float = 0.25
     # legacy knobs of the retired make_distributed_step ONLY; the scan
     # engine reads alpha/beta (and stat) from pop.freshness instead
     ema_alpha: float = 0.1
@@ -262,9 +275,8 @@ def migrate_mules(mule_models: Any, move_mask: jnp.ndarray, mesh: Mesh,
     inter-city traveler (0.715% of Foursquare check-ins). Applying the swap
     ``n_pods`` times walks a slot around the whole ring back to its origin,
     so migrations round-trip bitwise (pinned by ``tests/test_distributed``);
-    this is the building block for the ROADMAP's mid-run area-migration
-    scenario candidate (a ``ChurnSpec``-style declaration that fires
-    ``migrate_mules`` between scan chunks).
+    ``migrate_mule_state`` lifts this to the full live-state pytree; the
+    scan drivers fire it between chunks when ``rebucket_every`` is set.
     """
     n_pods = mesh.shape[pod_axis]
     perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
@@ -284,18 +296,47 @@ def migrate_mules(mule_models: Any, move_mask: jnp.ndarray, mesh: Mesh,
     return sharded(mule_models, move_mask)
 
 
-def bucket_mule_order(area) -> np.ndarray:
-    """[M] area ids -> [M] permutation grouping mules by spatial bucket.
+def migrate_mule_state(state: Dict[str, Any], move_mask: jnp.ndarray,
+                       mesh: Mesh, pod_axis: str = "pod",
+                       data_axis: str = "data") -> Dict[str, Any]:
+    """``migrate_mules`` over the *full* live-state pytree.
 
-    Stable sort, so the order within a bucket (and the identity when every
-    mule shares one area) is preserved. Applying this at colocation build
-    time makes the population's shard blocks area-contiguous, which is
-    what lets the ring's area-bitmask predicate prune remote hops —
-    interleaved assignments leave every area on every shard and nothing
-    prunable. Mid-run, ``migrate_mules`` is the re-bucketing primitive for
-    mules whose area changes (ROADMAP follow-up).
+    ``migrate_mules`` only ever saw model leaves; mid-run re-bucketing has
+    to move everything a mule owns — models, delivery timestamps, freshness
+    carry, optimizer slots — or the swapped-in mule trains against a
+    stranger's history. Every sharded ``mule*`` leaf rides the same pod-ring
+    ``collective_permute``; replicated leaves (fixed models, freshness
+    sketch, scalar clock) pass through untouched. Applying the swap
+    ``n_pods`` times round-trips bitwise, same as the model-only primitive.
     """
-    return np.argsort(np.asarray(area), kind="stable")
+    moving = {k: v for k, v in state.items()
+              if k.startswith("mule") and v is not None}
+    if not moving:
+        return dict(state)
+    swapped = migrate_mules(moving, move_mask, mesh,
+                            pod_axis=pod_axis, data_axis=data_axis)
+    return {**state, **swapped}
+
+
+def bucket_mule_order(area) -> np.ndarray:
+    """Area ids -> [M] permutation grouping mules by spatial bucket.
+
+    Accepts the static [M] contract or a time-varying [T, M] trace (the
+    mobility scenarios that motivate re-bucketing) — build-time bucketing
+    uses the t=0 row; the re-bucketing drivers pass the current row
+    explicitly. Stable sort, so the order within a bucket (and the
+    identity when every mule shares one area) is preserved. Applying this
+    at colocation build time makes the population's shard blocks
+    area-contiguous, which is what lets the ring's area-bitmask predicate
+    prune remote hops — interleaved assignments leave every area on every
+    shard and nothing prunable. Mid-run, the scan drivers re-apply it
+    whenever the compiled replay's drift scalar crosses
+    ``DistributedConfig.rebucket_threshold``.
+    """
+    a = np.asarray(area)
+    if a.ndim == 2:
+        a = a[0]
+    return np.argsort(a, kind="stable")
 
 
 def reorder_colocation(colocation: Dict[str, Any],
@@ -303,8 +344,8 @@ def reorder_colocation(colocation: Dict[str, Any],
     """Apply a mule permutation to every per-mule colocation column.
 
     Works on any colocation dict whose values are [T, M] (fixed_id /
-    exchange / active / pos [T, M, 2]) or [M] (static area) arrays; the
-    mule axis is the one matching ``len(order)``.
+    exchange / active / time-varying area / pos [T, M, 2]) or [M] (static
+    area) arrays; the mule axis is the one matching ``len(order)``.
     """
     order = np.asarray(order)
 
@@ -321,14 +362,17 @@ def reorder_colocation(colocation: Dict[str, Any],
 def reorder_mule_state(state: Dict[str, Any], order) -> Dict[str, Any]:
     """Apply a mule permutation to the per-mule state leaves.
 
-    ``mule_models`` / ``mule_ts`` rows follow their colocation columns
-    (``reorder_colocation``), so a bucket-ordered run is the same
-    simulation with mules renumbered; replicated leaves pass through.
+    Every ``mule*`` entry — models, timestamps, and any future per-mule
+    carry (freshness, optimizer slots) — has its rows follow their
+    colocation columns (``reorder_colocation``), so a bucket-ordered run is
+    the same simulation with mules renumbered; replicated leaves pass
+    through. Mid-run re-bucketing relies on this covering the *full* live
+    state: a key it missed would silently cross-wire a mule's history.
     """
     order = jnp.asarray(np.asarray(order))
     out = dict(state)
-    for k in ("mule_models", "mule_ts"):
-        if k in out and out[k] is not None:
+    for k in out:
+        if k.startswith("mule") and out[k] is not None:
             out[k] = jax.tree.map(lambda l: l[order], out[k])
     return out
 
@@ -340,15 +384,20 @@ def bucket_locality_fraction(area, n_shards: int) -> float:
     Same-area pairs are exactly the candidate encounters the ring must
     cover, so this is the share of encounter work the shard-local hop can
     serve — the benchmark's bucket-locality telemetry. 1.0 when there are
-    no same-area pairs at all.
+    no same-area pairs at all. Shards are the ``np.array_split`` blocks, so
+    a population size that does not divide ``n_shards`` is handled exactly
+    (the old equal-block slicing silently dropped the ragged tail, counting
+    its pairs as neither local nor remote).
     """
     a = np.asarray(area)
-    m_loc = a.shape[0] // n_shards
+    if a.ndim == 2:
+        a = a[0]
     local = total = 0
+    blocks = np.array_split(a, n_shards)
     for u in np.unique(a):
         c = int((a == u).sum())
         total += c * (c - 1)
-        for k in range(n_shards):
-            ck = int((a[k * m_loc:(k + 1) * m_loc] == u).sum())
+        for blk in blocks:
+            ck = int((blk == u).sum())
             local += ck * (ck - 1)
     return float(local) / float(total) if total else 1.0

@@ -55,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.baselines.gossip import RingSpec, gossip_step
+from repro.baselines.gossip import N_AREA_BITS, RingSpec, gossip_step
 from repro.baselines.local_only import local_step
 from repro.baselines.oppcl import oppcl_step
 from repro.core.freshness import age_bin_onehot, sketch_push_and_update
@@ -105,8 +105,11 @@ def compile_step(program: MethodProgram, train_fn: TrainFn,
     Uniform signature ``step(state, info, batches, key) -> state`` with
     ``info`` carrying ``fixed_id``/``exchange``/``pos``/``t`` (and
     optionally ``active``); ``area`` is the per-mule area vector the
-    peer-encounter ops need. Semantics are bitwise-pinned to the per-step
-    reference driver (``repro.scenarios.run_population_loop``).
+    peer-encounter ops need. On mobility scenarios whose area is a
+    time-varying [T, M] trace, the scan threads the current row through
+    ``info["area"]`` instead and the closed-over ``area`` is only the
+    fallback. Semantics are bitwise-pinned to the per-step reference
+    driver (``repro.scenarios.run_population_loop``).
     """
     peer_fn = (_PEER_STEPS[program.peer_exchange]
                if program.peer_exchange else None)
@@ -131,8 +134,8 @@ def compile_step(program: MethodProgram, train_fn: TrainFn,
             act = info.get("active")
 
             def exchange(models):
-                new = peer_fn(models, info["pos"], area, batches["mule"],
-                              train_fn, kp, active=act,
+                new = peer_fn(models, info["pos"], info.get("area", area),
+                              batches["mule"], train_fn, kp, active=act,
                               backend=cfg.enc_backend)
                 return apply_activity_mask(act, new, models)
 
@@ -219,7 +222,9 @@ def compile_distributed_step(program: MethodProgram, train_fn: Callable,
             act = info.get("active")
             m_loc = info["fixed_id"].shape[0]
             ring = RingSpec(dcfg.data_axis, ring_size,
-                            prune=getattr(dcfg, "ring_prune", True))
+                            prune=getattr(dcfg, "ring_prune", True),
+                            n_bits=(getattr(dcfg, "ring_bits", 0)
+                                    or N_AREA_BITS))
 
             def exchange(models):
                 # key split and batch slice stay inside the branch so the

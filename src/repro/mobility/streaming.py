@@ -26,7 +26,8 @@ A chunk generator is an object with
   chunk program;
 - ``generate_chunk(key, t0, chunk_len)`` — the hot path: pure ``jnp``
   math (traceable, no host NumPy), returning ``{"fixed_id": [c, n] int32,
-  "exchange": [c, n] bool, "pos": [c, n, 2] f32, "area": [n] int32,
+  "exchange": [c, n] bool, "pos": [c, n, 2] f32, "area": [n] int32 (or
+  [c, n] when the schedule's areas move — migratory traces),
   "active": [c, n] bool}`` for global steps ``t0 .. t0+chunk_len``.
   ``key`` is an optional override PRNG key; the builders below bake their
   seed at build time and ignore it, which is what makes a streamed replay
@@ -120,14 +121,17 @@ class CompactColocation:
 
     def __init__(self, n_mules: int, n_steps: int, arrays: Dict[str, Any],
                  *, cadence_scalar: Optional[int], has_active: bool,
-                 has_exchange_rle: bool, has_dense_pos: bool):
+                 has_exchange_rle: bool, has_dense_pos: bool,
+                 has_area_rle: bool = False, max_area: int = 0):
         self.n_mules = int(n_mules)
         self.n_steps = int(n_steps)
+        self.max_area = int(max_area)
         self._arrays = arrays
         self._cadence_scalar = cadence_scalar
         self._has_active = has_active
         self._has_exchange_rle = has_exchange_rle
         self._has_dense_pos = has_dense_pos
+        self._has_area_rle = has_area_rle
 
     def arrays(self) -> Dict[str, Any]:
         return self._arrays
@@ -139,6 +143,7 @@ class CompactColocation:
             "fid_starts": P(axis, None), "fid_vals": P(axis, None),
             "act_starts": P(axis, None), "act_vals": P(axis, None),
             "exc_starts": P(axis, None), "exc_vals": P(axis, None),
+            "area_starts": P(axis, None), "area_vals": P(axis, None),
             "area": P(axis), "cadence": P(),
             "pos": P(None, axis, None),
         }
@@ -146,7 +151,8 @@ class CompactColocation:
 
     def static_token(self) -> Tuple:
         return ("compact", self._cadence_scalar, self._has_active,
-                self._has_exchange_rle, self._has_dense_pos)
+                self._has_exchange_rle, self._has_dense_pos,
+                self._has_area_rle)
 
     def schedule_bytes(self) -> int:
         """Bytes of compact schedule resident on device (O(M * segments))."""
@@ -182,8 +188,13 @@ class CompactColocation:
                 (chunk_len, n, 2))
         else:
             pos = jnp.zeros((chunk_len, n, 2), jnp.float32)
+        if self._has_area_rle:
+            area, _ = _expand_rle(arrays["area_starts"],
+                                  arrays["area_vals"], ts)
+        else:
+            area = arrays["area"]
         return {"fixed_id": fid, "exchange": exch, "pos": pos,
-                "area": arrays["area"], "active": act}
+                "area": area, "active": act}
 
     def generate_chunk(self, key, t0, chunk_len: int) -> Dict[str, Any]:
         return self.expand(self._arrays, key, t0, chunk_len)
@@ -236,13 +247,21 @@ def compact_colocation(colocation: Dict[str, Any],
     area = colocation.get("area")
     area = (np.zeros((n_mules,), np.int32) if area is None
             else np.asarray(area, np.int32))
-    arrays["area"] = jnp.asarray(area)
+    has_area_rle = area.ndim == 2
+    if has_area_rle:
+        ars, arv = _rle_columns(area, np.int32(0))
+        arrays["area_starts"] = jnp.asarray(ars)
+        arrays["area_vals"] = jnp.asarray(arv)
+    else:
+        arrays["area"] = jnp.asarray(area)
 
     return CompactColocation(n_mules, n_steps, arrays,
                              cadence_scalar=cadence_scalar,
                              has_active=has_active,
                              has_exchange_rle=has_exchange_rle,
-                             has_dense_pos=has_dense_pos)
+                             has_dense_pos=has_dense_pos,
+                             has_area_rle=has_area_rle,
+                             max_area=int(area.max(initial=0)))
 
 
 class CommuterStream:
@@ -287,6 +306,7 @@ class CommuterStream:
         self.commute = int(commute)
         self.jitter = int(jitter)
         self.exchange_steps = int(exchange_steps)
+        self.max_area = (int(n_places) - 1) // 4
         self.duty_period = int(duty_period)
         self.duty_on = max(int(duty_on_frac * duty_period), 1) \
             if duty_period else 0
@@ -387,6 +407,30 @@ def commuter_stream(seed: int, n_mules: int, n_steps: int,
     return CommuterStream(seed, n_mules, n_steps, **kw)
 
 
+def reorder_generator_arrays(generator, arrays: Dict[str, Any],
+                             order) -> Dict[str, Any]:
+    """Permute a generator's in-flight mule columns into a new bucket order.
+
+    Leaves whose ``specs()`` entry shards over the mule axis are gathered
+    along that axis with ``order`` (entry ``p`` names the source column for
+    the mule now in slot ``p``); replicated leaves pass through untouched.
+    This is what the streamed engine's mid-run re-bucketing applies to
+    ``generator.arrays()`` at a swap, so every later ``expand`` emits its
+    columns in the post-swap layout.
+    """
+    order = jnp.asarray(np.asarray(order))
+    sentinel = "_mule_"
+    specs = generator.specs(sentinel)
+
+    def one(spec, leaf):
+        axes = tuple(spec)
+        if sentinel in axes:
+            return jnp.take(leaf, order, axis=axes.index(sentinel))
+        return leaf
+
+    return {k: one(specs[k], v) for k, v in arrays.items()}
+
+
 def materialize_generator(gen, n_steps: Optional[int] = None,
                           chunk_len: int = 256) -> Dict[str, np.ndarray]:
     """Expand a chunk generator into the classic numpy colocation dict.
@@ -402,8 +446,11 @@ def materialize_generator(gen, n_steps: Optional[int] = None,
         chunks.append({k: np.asarray(v) for k, v in c.items()})
     co = {k: np.concatenate([c[k] for c in chunks], axis=0)
           for k in ("fixed_id", "exchange", "pos", "active")}
-    co["area"] = chunks[0]["area"] if chunks else np.zeros(
-        (gen.n_mules,), np.int32)
+    if chunks and chunks[0]["area"].ndim == 2:
+        co["area"] = np.concatenate([c["area"] for c in chunks], axis=0)
+    else:
+        co["area"] = chunks[0]["area"] if chunks else np.zeros(
+            (gen.n_mules,), np.int32)
     if hasattr(gen, "init_fields"):
         co.update(gen.init_fields())
     return co

@@ -107,6 +107,30 @@ def dwell_exchange_flags(fixed_id: np.ndarray, exchange_steps=3) -> np.ndarray:
     return present & (dwell % steps == 0)
 
 
+def area_over_time(fixed_id: np.ndarray, init_area,
+                   places_per_area: int = 4) -> np.ndarray:
+    """Per-step home-area trace ``[T, M]`` from a co-location grid.
+
+    A mule's area is the area of the last place it visited (``place //
+    places_per_area``) — corridor steps (``fixed_id == -1``) keep the area
+    of the previous visit, and steps before any visit fall back to
+    ``init_area``. This is the migratory-scenario companion to
+    ``dwell_exchange_flags``: it turns the same grid into the time-varying
+    ``"area"`` column the ring's mid-run re-bucketing triggers on.
+    """
+    fid = np.asarray(fixed_id)
+    n_steps, n_users = fid.shape
+    present = fid >= 0
+    t_grid = np.arange(n_steps, dtype=np.int64)[:, None]
+    last_t = np.maximum.accumulate(np.where(present, t_grid, -1), axis=0)
+    seen = last_t >= 0
+    last_place = np.take_along_axis(fid, np.maximum(last_t, 0).astype(np.intp),
+                                    axis=0)
+    init = np.broadcast_to(np.asarray(init_area), (n_users,))
+    return np.where(seen, last_place // places_per_area,
+                    init[None, :]).astype(np.int32)
+
+
 def _cadence_of(fixed_id: np.ndarray, exchange_steps) -> np.ndarray:
     """Per-cell exchange cadence: scalar, or looked up by space id.
 

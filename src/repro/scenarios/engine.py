@@ -182,29 +182,45 @@ def _scan_core(state, last, fid, exch, pos, area, act, ts, stacked_batches,
     path hands in ``t0 + arange(chunk)``), so the per-step
     ``fold_in(key, t)`` discipline — and with it bitwise parity against a
     full-horizon replay — is independent of how the horizon is chunked.
-    ``last`` enters as carry for the same reason. Returns
+    ``last`` enters as carry for the same reason.
+
+    ``area`` is the static [M] vector of the classic contract, or a
+    time-varying [T, M] trace (migratory scenarios) — the latter rides the
+    scan as one more xs column, so step ``t`` hands the method step its
+    *current* row through ``info["area"]``. Returns
     ``(state, last_fid, evals-or-None)``.
     """
     n_steps = fid.shape[0]
+    area_dyn = area.ndim == fid.ndim
 
     def body(carry, xs):
         st, last = carry
+        if area_dyn:
+            fid_t, exch_t, pos_t, act_t, area_t = xs[:5]
+            rest = xs[5:]
+        else:
+            fid_t, exch_t, pos_t, act_t = xs[:4]
+            area_t = area
+            rest = xs[4:]
         if dynamic:
-            fid_t, exch_t, pos_t, act_t, t = xs
+            (t,) = rest
             kb, ks = jax.random.split(jax.random.fold_in(key, t))
             bt = (batch_fn(kb, t, context) if has_context
                   else batch_fn(kb, t))
         else:
-            fid_t, exch_t, pos_t, act_t, t, bt = xs
+            t, bt = rest
             ks = jax.random.fold_in(key, t)
         st = step_fn(st, {"fixed_id": fid_t, "exchange": exch_t,
-                          "pos": pos_t, "area": area, "active": act_t,
+                          "pos": pos_t, "area": area_t, "active": act_t,
                           "t": t}, bt, ks)
         last = jnp.where((fid_t >= 0) & act_t, fid_t, last)
         return (st, last), None
 
     def xs_slice(lo, hi):
-        xs = (fid[lo:hi], exch[lo:hi], pos[lo:hi], act[lo:hi], ts[lo:hi])
+        xs = (fid[lo:hi], exch[lo:hi], pos[lo:hi], act[lo:hi])
+        if area_dyn:
+            xs = xs + (area[lo:hi],)
+        xs = xs + (ts[lo:hi],)
         if not dynamic:
             xs = xs + (jax.tree.map(lambda l: l[lo:hi], stacked_batches),)
         return xs
@@ -277,7 +293,9 @@ def _build_chunk_replay(generator, batches: Any, train_fn: TrainFn,
                         eval_every: Optional[int],
                         eval_fn: Optional[Callable], chunk_len: int,
                         has_context: bool,
-                        step_builder: Optional[Callable] = None) -> Callable:
+                        step_builder: Optional[Callable] = None,
+                        rebucket: bool = False,
+                        pmean_axis: Optional[str] = None) -> Callable:
     """Un-jitted streamed-chunk core ``(state, last, t0, gen_arrays,
     stacked_chunk, context, key) -> (state, last_fid, evals)``.
 
@@ -288,6 +306,15 @@ def _build_chunk_replay(generator, batches: Any, train_fn: TrainFn,
     the materialized path scans. Only the generator's *static* config is
     closed over, so one compiled program serves every same-shape chunk of
     every same-signature generator, whatever the horizon.
+
+    ``rebucket=True`` compiles the re-bucketing variant: the signature
+    grows a ``bucket_area`` input after ``gen_arrays`` (each mule's area at
+    the last bucket swap, shard-local under shard_map) and the return grows
+    ``(drift, area_last)`` before ``evals`` — the fraction of mules whose
+    end-of-chunk area left their bucket (``pmean``'d over ``pmean_axis``
+    into a replicated scalar, so the trigger costs one tiny collective per
+    chunk) and the end-of-chunk area vector the host driver argsorts into
+    the next bucket order when the drift crosses the threshold.
     """
     dynamic = callable(batches)
     batch_fn = batches if dynamic else None
@@ -295,30 +322,44 @@ def _build_chunk_replay(generator, batches: Any, train_fn: TrainFn,
         step_builder = lambda area: make_method_step(method, train_fn, cfg,
                                                      area)
 
-    def chunk_replay(state, last, t0, gen_arrays, stacked_chunk, context,
-                     key):
+    def chunk_replay(state, last, t0, gen_arrays, *rest):
+        if rebucket:
+            bucket_area, stacked_chunk, context, key = rest
+        else:
+            stacked_chunk, context, key = rest
         _STATS["traces"] += 1          # python side effect: fires per trace
         ts = jnp.asarray(t0, jnp.int32) + jnp.arange(chunk_len,
                                                      dtype=jnp.int32)
         co = generator.expand(gen_arrays, None, t0, chunk_len)
         step_fn = step_builder(co["area"])
-        return _scan_core(state, last, co["fixed_id"], co["exchange"],
-                          co["pos"], co["area"], co["active"], ts,
-                          stacked_chunk, context, key, dynamic=dynamic,
-                          batch_fn=batch_fn, has_context=has_context,
-                          step_fn=step_fn, eval_every=eval_every,
-                          eval_fn=eval_fn)
+        out = _scan_core(state, last, co["fixed_id"], co["exchange"],
+                         co["pos"], co["area"], co["active"], ts,
+                         stacked_chunk, context, key, dynamic=dynamic,
+                         batch_fn=batch_fn, has_context=has_context,
+                         step_fn=step_fn, eval_every=eval_every,
+                         eval_fn=eval_fn)
+        if not rebucket:
+            return out
+        st, last_fid, evals = out
+        area_arr = co["area"]
+        area_end = area_arr[-1] if area_arr.ndim == 2 else area_arr
+        drift = jnp.mean((area_end != bucket_area).astype(jnp.float32))
+        if pmean_axis:
+            drift = jax.lax.pmean(drift, pmean_axis)
+        return st, last_fid, drift, jnp.asarray(area_end, jnp.int32), evals
 
     return chunk_replay
 
 
-def _distributed_specs(state, batches, dcfg, *, vmapped: bool):
+def _distributed_specs(state, batches, dcfg, *, vmapped: bool,
+                       area_dyn: bool = False):
     """shard_map in/out PartitionSpecs for the distributed replay.
 
     Mule-population leaves (leading mule axis) shard over ``dcfg.data_axis``;
     everything else replicates. With ``vmapped`` the seed stack axis is an
     extra unsharded leading dim (the seed vmap sits *inside* the shard_map
-    block, outside the mule axis).
+    block, outside the mule axis). ``area_dyn`` marks a time-varying
+    [T, M] area trace, which shards like the other colocation columns.
     """
     from jax.sharding import PartitionSpec as P
     ax = dcfg.data_axis
@@ -328,8 +369,7 @@ def _distributed_specs(state, batches, dcfg, *, vmapped: bool):
         return jax.tree.map(lambda _: spec, tree)
 
     state_specs = {
-        k: subtree(v, P(*lead, ax) if k in ("mule_models", "mule_ts")
-                   else P())
+        k: subtree(v, P(*lead, ax) if k.startswith("mule") else P())
         for k, v in state.items()
     }
     if callable(batches) or batches is None:
@@ -339,9 +379,10 @@ def _distributed_specs(state, batches, dcfg, *, vmapped: bool):
             k: subtree(v, P(*lead, None, ax) if k == "mule" else P())
             for k, v in batches.items()
         }
+    area_spec = P(*lead, None, ax) if area_dyn else P(*lead, ax)
     in_specs = (state_specs,
                 P(*lead, None, ax), P(*lead, None, ax),   # fid, exch
-                P(*lead, None, ax), P(*lead, ax),         # pos, area
+                P(*lead, None, ax), area_spec,            # pos, area
                 P(*lead, None, ax),                       # activity mask
                 batch_specs, P(), P())                    # batches, ctx, key
     out_specs = (state_specs, P(*lead, ax), P())          # state, last, evals
@@ -403,7 +444,8 @@ def get_compiled_replay(state, fid, exch, pos, area, act, batches, context,
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
         in_specs, out_specs = _distributed_specs(
-            state, batches, dcfg, vmapped=vmapped)
+            state, batches, dcfg, vmapped=vmapped,
+            area_dyn=np.ndim(area) == np.ndim(fid))
         core = shard_map(core, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
     fn = jax.jit(core, donate_argnums=(0,) if donate else ())
@@ -413,13 +455,16 @@ def get_compiled_replay(state, fid, exch, pos, area, act, batches, context,
     return fn
 
 
-def _streamed_specs(state, generator, batches, dcfg):
+def _streamed_specs(state, generator, batches, dcfg, *,
+                    rebucket: bool = False):
     """shard_map in/out PartitionSpecs for the streamed chunk replay.
 
     Argument order mirrors ``_build_chunk_replay``: (state, last, t0,
-    gen_arrays, stacked_chunk, context, key). Mule-population leaves and
-    the generator's mule-leading arrays (its ``specs`` method knows which)
-    shard over ``dcfg.data_axis``; ``t0``/context/key replicate.
+    gen_arrays[, bucket_area], stacked_chunk, context, key). Mule-population
+    leaves and the generator's mule-leading arrays (its ``specs`` method
+    knows which) shard over ``dcfg.data_axis``; ``t0``/context/key
+    replicate. The re-bucketing variant adds the sharded ``bucket_area``
+    input and the ``(drift replicated, area_last sharded)`` outputs.
     """
     from jax.sharding import PartitionSpec as P
     ax = dcfg.data_axis
@@ -428,7 +473,7 @@ def _streamed_specs(state, generator, batches, dcfg):
         return jax.tree.map(lambda _: spec, tree)
 
     state_specs = {
-        k: subtree(v, P(ax) if k in ("mule_models", "mule_ts") else P())
+        k: subtree(v, P(ax) if k.startswith("mule") else P())
         for k, v in state.items()
     }
     if callable(batches) or batches is None:
@@ -438,9 +483,14 @@ def _streamed_specs(state, generator, batches, dcfg):
             k: subtree(v, P(None, ax) if k == "mule" else P())
             for k, v in batches.items()
         }
-    in_specs = (state_specs, P(ax), P(), generator.specs(ax), batch_specs,
-                P(), P())
-    out_specs = (state_specs, P(ax), P())
+    if rebucket:
+        in_specs = (state_specs, P(ax), P(), generator.specs(ax), P(ax),
+                    batch_specs, P(), P())
+        out_specs = (state_specs, P(ax), P(), P(ax), P())
+    else:
+        in_specs = (state_specs, P(ax), P(), generator.specs(ax),
+                    batch_specs, P(), P())
+        out_specs = (state_specs, P(ax), P())
     return in_specs, out_specs
 
 
@@ -449,7 +499,8 @@ def get_compiled_chunk_replay(state, generator, gen_arrays, batches, context,
                               *, method: str, eval_every: Optional[int],
                               eval_fn: Optional[Callable], chunk_len: int,
                               stacked_chunk: Any = None, donate: bool = True,
-                              mesh=None, dcfg=None) -> Callable:
+                              mesh=None, dcfg=None,
+                              rebucket: bool = False) -> Callable:
     """Fetch (or build + memoize) the jitted streamed-chunk replay.
 
     The cache key is deliberately **horizon-free**: it hashes the
@@ -463,7 +514,8 @@ def get_compiled_chunk_replay(state, generator, gen_arrays, batches, context,
     buffers across the whole chunk loop.
     """
     dynamic = callable(batches)
-    kind = "stream_distributed" if mesh is not None else "stream"
+    kind = ("stream_distributed" if mesh is not None else "stream") \
+        + ("_rebucket" if rebucket else "")
     cache_key = (
         kind, method, cfg, eval_every, chunk_len,
         type(generator).__qualname__, generator.static_token(),
@@ -489,11 +541,13 @@ def get_compiled_chunk_replay(state, generator, gen_arrays, batches, context,
                                method=method, eval_every=eval_every,
                                eval_fn=eval_fn, chunk_len=chunk_len,
                                has_context=context is not None,
-                               step_builder=step_builder)
+                               step_builder=step_builder, rebucket=rebucket,
+                               pmean_axis=(dcfg.data_axis
+                                           if mesh is not None else None))
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
         in_specs, out_specs = _streamed_specs(state, generator, batches,
-                                              dcfg)
+                                              dcfg, rebucket=rebucket)
         core = shard_map(core, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
     fn = jax.jit(core, donate_argnums=(0, 1) if donate else ())
@@ -538,6 +592,27 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
                one like ``run_population_distributed``. ``cfg`` is
                ignored in favor of ``dcfg.pop`` when ``dcfg`` is set.
 
+    Mid-run re-bucketing (``dcfg.rebucket_every > 0``): every
+    ``rebucket_every`` steps — which must be a multiple of ``chunk_len``,
+    so the check lands on a chunk boundary where ``generator.expand`` gives
+    a natural sync point — the compiled chunk emits the psum'd fraction of
+    mules whose area drifted off their bucket. Past
+    ``dcfg.rebucket_threshold``, the driver argsorts the end-of-chunk area
+    into a fresh bucket order and permutes the full live mule state
+    (``reorder_mule_state`` — models, timestamps, every ``mule*`` carry),
+    the ``last_fid`` column, the generator's in-flight mule columns
+    (``reorder_generator_arrays``) and any stacked mule batches, so the
+    ring's hop pruning keeps biting as the population migrates.
+    ``aux["rebucket"]`` reports ``{checks, swaps, drift, order}`` (``order``
+    is the cumulative permutation: entry ``p`` is the original index of the
+    mule now in slot ``p`` — apply it to per-mule outputs to recover the
+    input ordering). Note a swap renumbers mule slots, so positional batch
+    callables and per-mule key draws follow the *slot*, exactly like
+    build-time bucketing — a re-bucketed run is the same simulation family
+    with mules renamed mid-run, and parity (pruned == full ring, streamed
+    == materialized) holds across every swap because the trigger depends
+    only on the area schedule, never on pruning or model state.
+
     Everything else (batches/eval/method/context contracts, the returned
     ``(final_state, aux)``) matches ``run_population`` — and so do the
     results: a streamed replay is bitwise-equal to the materialized engine
@@ -559,7 +634,15 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
             f"chunk_len={chunk_len} must be a multiple of "
             f"eval_every={eval_every} so streamed evals land on the same "
             f"global steps as the materialized engine")
+    rb = int(getattr(dcfg, "rebucket_every", 0) or 0) if dcfg is not None \
+        else 0
+    if rb > 0 and rb % chunk_len:
+        raise ValueError(
+            f"rebucket_every={rb} must be a multiple of "
+            f"chunk_len={chunk_len} so re-bucketing lands on chunk "
+            "boundaries (the streamed engine swaps state between chunks)")
     if dcfg is not None:
+        dcfg = _resolve_ring_bits(dcfg, getattr(generator, "max_area", 0))
         if mesh is None:
             mesh = _auto_mesh(method, n_mules, dcfg)
         _check_mule_sharding(n_mules, mesh, dcfg)
@@ -567,6 +650,17 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
     dynamic = callable(batches)
     last = jnp.zeros((n_mules,), jnp.int32)
     evals_chunks = []
+    rebucket = rb > 0
+    rb_aux = None
+    if rebucket:
+        from repro.core.distributed import reorder_mule_state
+        from repro.mobility.streaming import reorder_generator_arrays
+        a0 = generator.expand(gen_arrays, None, jnp.asarray(0, jnp.int32),
+                              1)["area"]
+        bucket_area = jnp.asarray(a0[0] if a0.ndim == 2 else a0, jnp.int32)
+        threshold = float(getattr(dcfg, "rebucket_threshold", 0.25))
+        rb_aux = {"checks": 0, "swaps": 0, "drift": [],
+                  "order": np.arange(n_mules)}
     for t0 in range(0, n_steps, chunk_len):
         cl = min(chunk_len, n_steps - t0)
         stacked_chunk = (None if dynamic else
@@ -575,11 +669,41 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
             state, generator, gen_arrays, batches, context, key, train_fn,
             pcfg, method=method, eval_every=eval_every, eval_fn=eval_fn,
             chunk_len=cl, stacked_chunk=stacked_chunk, donate=donate,
-            mesh=mesh, dcfg=dcfg)
-        state, last, ev = fn(state, last, jnp.asarray(t0, jnp.int32),
-                             gen_arrays, stacked_chunk, context, key)
+            mesh=mesh, dcfg=dcfg, rebucket=rebucket)
+        if rebucket:
+            state, last, drift, area_last, ev = fn(
+                state, last, jnp.asarray(t0, jnp.int32), gen_arrays,
+                bucket_area, stacked_chunk, context, key)
+        else:
+            state, last, ev = fn(state, last, jnp.asarray(t0, jnp.int32),
+                                 gen_arrays, stacked_chunk, context, key)
         if ev is not None:
             evals_chunks.append(ev)
+        t_end = t0 + cl
+        if rebucket and t_end % rb == 0 and t_end < n_steps:
+            rb_aux["checks"] += 1
+            d = float(drift)
+            rb_aux["drift"].append(d)
+            if d > threshold:
+                area_now = np.asarray(area_last)
+                order = np.argsort(area_now, kind="stable")
+                if not np.array_equal(order, np.arange(n_mules)):
+                    odev = jnp.asarray(order)
+                    state = reorder_mule_state(state, order)
+                    last = jnp.take(last, odev, axis=0)
+                    gen_arrays = reorder_generator_arrays(
+                        generator, gen_arrays, order)
+                    if not dynamic:
+                        batches = {
+                            k: (jax.tree.map(
+                                lambda l: jnp.take(l, odev, axis=1), v)
+                                if k == "mule" else v)
+                            for k, v in batches.items()}
+                    rb_aux["order"] = rb_aux["order"][order]
+                    rb_aux["swaps"] += 1
+                # the current area in the (possibly) new layout is the
+                # baseline the next drift check measures against
+                bucket_area = jnp.asarray(area_now[order], jnp.int32)
     n_ev = n_steps // eval_every if (eval_fn is not None and eval_every) else 0
     steps = (np.arange(n_ev) + 1) * eval_every - 1 if n_ev else \
         np.zeros((0,), int)
@@ -588,7 +712,10 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
         evals = (evals_chunks[0] if len(evals_chunks) == 1 else
                  jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                               *evals_chunks))
-    return state, {"last_fid": last, "eval_steps": steps, "evals": evals}
+    aux = {"last_fid": last, "eval_steps": steps, "evals": evals}
+    if rb_aux is not None:
+        aux["rebucket"] = rb_aux
+    return state, aux
 
 
 def run_population(state: Dict[str, Any], colocation: Dict[str, Any],
@@ -684,7 +811,8 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
                                               active=act))
     mask_sel = jax.jit(apply_activity_mask)
 
-    fid_T, exch_T, pos_T, area, act_T = _colocation_tensors(colocation)
+    fid_T, exch_T, pos_T, area_A, act_T = _colocation_tensors(colocation)
+    area_dyn = area_A.ndim == 2
     masked = "active" in colocation and colocation["active"] is not None
     n_steps, n_mules = fid_T.shape
     dynamic = callable(batches)
@@ -692,6 +820,7 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
     last_fid = jnp.zeros((n_mules,), jnp.int32)
     for t in range(n_steps):
         fid, exch, pos = fid_T[t], exch_T[t], pos_T[t]
+        area = area_A[t] if area_dyn else area_A
         act = act_T[t] if masked else None
         if dynamic:
             kb, ks = jax.random.split(jax.random.fold_in(key, t))
@@ -744,6 +873,22 @@ def run_population_loop(state: Dict[str, Any], colocation: Dict[str, Any],
 # ---------------------------------------------------------------------------
 # distributed replay: the scan under shard_map over the mule axis
 # ---------------------------------------------------------------------------
+
+
+def _resolve_ring_bits(dcfg, max_area):
+    """Pick the ring predicate width when ``dcfg.ring_bits == 0`` (auto).
+
+    Widens to 64 bits once any area id reaches 32 — a 32-wide mask folds
+    areas ``% 32``, aliasing distinct areas onto one bit so the ring
+    quietly stops pruning. Safe to resolve per-run: pruning is exact, so
+    the mask width never changes results, only the prune rate (and the
+    jit cache key, which hashes the resolved config by value).
+    """
+    import dataclasses
+    if getattr(dcfg, "ring_bits", 0):
+        return dcfg
+    return dataclasses.replace(dcfg,
+                               ring_bits=64 if int(max_area) >= 32 else 32)
 
 
 def _check_mule_sharding(n_mules: int, mesh, dcfg) -> None:
@@ -835,6 +980,24 @@ def run_population_distributed(state: Dict[str, Any],
                         "argument: 'key'")
     fid, exch, pos, area, act = _colocation_tensors(colocation)
     n_steps = fid.shape[0]
+    dcfg = _resolve_ring_bits(dcfg, jnp.max(area) if area.size else 0)
+    rb = int(getattr(dcfg, "rebucket_every", 0) or 0)
+    if rb > 0:
+        # Re-bucketing swaps live state between chunks, so the materialized
+        # run delegates to the streamed engine with one chunk per rebucket
+        # window — streamed == materialized is pinned bitwise, so this is
+        # the same replay with swap points inserted.
+        if eval_fn is not None and eval_every and rb % eval_every:
+            raise ValueError(
+                f"rebucket_every={rb} must be a multiple of "
+                f"eval_every={eval_every} so drift checks land on eval "
+                "boundaries")
+        from repro.mobility.streaming import compact_colocation
+        return run_population_streamed(
+            state, compact_colocation(colocation), batches, train_fn,
+            dcfg.pop, key, n_steps=n_steps, chunk_len=rb,
+            eval_every=eval_every, eval_fn=eval_fn, method=method,
+            context=context, donate=donate, mesh=mesh, dcfg=dcfg)
     if mesh is None:
         mesh = _auto_mesh(method, fid.shape[1], dcfg)
     _check_mule_sharding(fid.shape[1], mesh, dcfg)
@@ -871,7 +1034,8 @@ def run_population_distributed_loop(state: Dict[str, Any],
     from jax.sharding import PartitionSpec as P
     from repro.core.distributed import make_distributed_method_step
 
-    fid_T, exch_T, pos_T, area, act_T = _colocation_tensors(colocation)
+    fid_T, exch_T, pos_T, area_A, act_T = _colocation_tensors(colocation)
+    area_dyn = area_A.ndim == 2
     n_steps, n_mules = fid_T.shape
     _check_mule_sharding(n_mules, mesh, dcfg)
     ax = dcfg.data_axis
@@ -900,7 +1064,8 @@ def run_population_distributed_loop(state: Dict[str, Any],
         else:
             ks = jax.random.fold_in(key, t)
             bt = jax.tree.map(lambda l: l[t], batches)
-        info = {"fixed_id": fid, "exchange": exch, "pos": pos, "area": area,
+        info = {"fixed_id": fid, "exchange": exch, "pos": pos,
+                "area": area_A[t] if area_dyn else area_A,
                 "active": act, "t": jnp.asarray(t, jnp.int32)}
         state = step(state, info, bt, ks)
         last_fid = jnp.where((fid >= 0) & act, fid, last_fid)

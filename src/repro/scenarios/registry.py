@@ -12,7 +12,9 @@ Co-location builders return numpy arrays:
   fixed_id  [T, M] int32   co-located fixed device per mule (-1 = none)
   exchange  [T, M] bool    completed-exchange flags
   pos       [T, M, 2] f32  positions (zeros for check-in traces)
-  area      [M] int32      each mule's area (constant; areas are isolated)
+  area      [M] int32      each mule's area — or [T, M] int32 when mules
+                           migrate between areas (the migratory scenarios;
+                           the engines thread the current row per step)
   active    [T, M] bool    churn mask (optional; absent == dense)
   init_space/init_area [M] initial space/area (seeds the data partition)
 
@@ -288,6 +290,32 @@ register(ScenarioSpec(
     description="Three near-isolated cities (12 spaces, 3 areas) with rare "
                 "cross-city travelers: affinity groups must form per city "
                 "without cross-area leakage."))
+
+
+def _migratory_colocation(seed: int, n_mules: int, n_steps: int) -> Colocation:
+    """3-city trace with heavy travel and a *time-varying* area column.
+
+    ``p_travel=0.25`` makes relocation the norm, and ``area_over_time``
+    replaces the static per-mule area with the ``[T, M]`` trace of each
+    mule's current city — the workload whose build-time bucketing decays
+    and mid-run re-bucketing (``DistributedConfig.rebucket_every``) exists
+    to fix.
+    """
+    from repro.mobility import area_over_time
+    co = _from_trace(multi_area_trace, n_places=12, n_areas=3,
+                     p_travel=0.25)(seed, n_mules, n_steps)
+    co["area"] = area_over_time(co["fixed_id"], co["init_area"])
+    return co
+
+
+register(ScenarioSpec(
+    name="multi_area_migratory",
+    colocation=_migratory_colocation,
+    mode="mobile", dist="shards", n_fixed=12,
+    description="Three cities with heavy migration (p_travel=0.25) and a "
+                "time-varying [T, M] area column: mules relocate for good, "
+                "so shard/area alignment decays unless the distributed ring "
+                "re-buckets mid-run."))
 
 # -- HAR task variants -------------------------------------------------------
 # Same mobility as the image-task trace scenarios, but the harness binds

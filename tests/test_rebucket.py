@@ -1,0 +1,371 @@
+"""Mid-run re-bucketing: drift-triggered mule swaps on long mobile traces.
+
+Build-time bucketing (`bucket_mule_order` at colocation build) decays as
+mules migrate between areas; these tests pin the machinery that keeps the
+ring's hop pruning effective mid-run — the permutation primitives round-trip
+over the full state/colocation/generator surface, the streamed driver's
+drift check fires and swaps without perturbing results (pruned == full ring
+across a swap; static-area runs are bitwise-identical with re-bucketing on
+or off), the distributed engine delegates, the config lands in the jit
+cache key, and the auto-width area bitmask stops aliasing past 32 areas.
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines.gossip import (area_bit_collision_rate, area_bits,
+                                    ring_hop_mask)
+from repro.core.distributed import (DistributedConfig, bucket_locality_fraction,
+                                    bucket_mule_order, reorder_colocation,
+                                    reorder_mule_state, to_distributed_state)
+from repro.mobility import (area_over_time, compact_colocation,
+                            reorder_generator_arrays)
+from repro.scenarios import (get_scenario, list_scenarios,
+                             run_population_distributed,
+                             run_population_streamed)
+from repro.scenarios.engine import (_resolve_ring_bits, jit_cache_clear,
+                                    jit_cache_stats)
+
+from conftest import assert_trees_bitwise, linear_population_setup
+
+M, T = 8, 96
+
+
+def _migratory(seed=0, m=M, t=T):
+    return get_scenario("multi_area_migratory").colocation(seed, m, t)
+
+
+def _mesh():
+    return jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# permutation primitives
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_locality_fraction_counts_ragged_tail():
+    """M=7 over 4 shards: np.array_split blocks are [2, 2, 2, 1]; the pairs
+    of the ragged tail count (the old equal-block slice dropped mule 6,
+    silently inflating locality)."""
+    area = np.array([0, 0, 0, 0, 1, 1, 1])
+    # same-area ordered pairs: area 0 -> 4*3 = 12, area 1 -> 3*2 = 6.
+    # blocks [0,0] [0,0] [1,1] [1]: local pairs 2 + 2 + 2 = 6 of 18.
+    got = bucket_locality_fraction(area, 4)
+    assert got == pytest.approx(6 / 18)
+    # all-distinct areas: no candidate pairs at all -> 1.0 by convention
+    assert bucket_locality_fraction(np.arange(7), 4) == 1.0
+
+
+@pytest.mark.parametrize("name", sorted(list_scenarios()))
+def test_reorder_colocation_roundtrips_every_scenario(name):
+    co = get_scenario(name).colocation(0, M, 48)
+    rng = np.random.default_rng(3)
+    order = rng.permutation(M)
+    inv = np.argsort(order)
+    fwd = reorder_colocation(co, order)
+    np.testing.assert_array_equal(np.asarray(fwd["fixed_id"]),
+                                  np.asarray(co["fixed_id"])[:, order])
+    back = reorder_colocation(fwd, inv)
+    for k in co:
+        np.testing.assert_array_equal(
+            np.asarray(back[k]), np.asarray(co[k]), err_msg=f"{name}:{k}")
+
+
+def test_reorder_mule_state_roundtrips_and_spares_replicated():
+    rng = np.random.default_rng(0)
+    state = {
+        "mule_models": {"w": jnp.asarray(rng.normal(size=(M, 5)))},
+        "mule_ts": jnp.arange(M),
+        "fixed_models": {"w": jnp.asarray(rng.normal(size=(4, 5)))},
+        "sketch": jnp.asarray(rng.normal(size=(7,))),
+        "mule_opt": None,
+    }
+    order = rng.permutation(M)
+    fwd = reorder_mule_state(state, order)
+    np.testing.assert_array_equal(np.asarray(fwd["mule_ts"]),
+                                  np.arange(M)[order])
+    assert fwd["fixed_models"]["w"] is state["fixed_models"]["w"]
+    assert fwd["mule_opt"] is None
+    back = reorder_mule_state(fwd, np.argsort(order))
+    assert_trees_bitwise(
+        {k: v for k, v in back.items() if v is not None},
+        {k: v for k, v in state.items() if v is not None},
+        "reorder_mule_state round-trip")
+
+
+@pytest.mark.parametrize("name", ["multi_area_migratory", "commuter_churn"])
+def test_reorder_generator_arrays_matches_rebuilt_generator(name):
+    """Permuting a generator's in-flight mule columns equals compacting the
+    permuted colocation from scratch (RLE is per-mule, so rows follow their
+    mules), and the inverse permutation restores the original arrays."""
+    co = get_scenario(name).colocation(0, M, 64)
+    gen = compact_colocation(co)
+    order = np.random.default_rng(1).permutation(M)
+    fwd = reorder_generator_arrays(gen, gen.arrays(), order)
+    rebuilt = compact_colocation(reorder_colocation(co, order)).arrays()
+    assert sorted(fwd) == sorted(rebuilt)
+    for k in fwd:
+        np.testing.assert_array_equal(np.asarray(fwd[k]),
+                                      np.asarray(rebuilt[k]), err_msg=k)
+    back = reorder_generator_arrays(gen, fwd, np.argsort(order))
+    for k in back:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(gen.arrays()[k]), err_msg=k)
+
+
+def test_area_over_time_holds_last_known_area():
+    fid = np.array([[-1, 4], [8, -1], [-1, -1], [0, 5]], np.int32)
+    init = np.array([3, 1])
+    got = area_over_time(fid, init, places_per_area=4)
+    want = np.array([[3, 1], [2, 1], [2, 1], [0, 1]], np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# streamed driver: drift check, swaps, parity
+# ---------------------------------------------------------------------------
+
+
+def _streamed(co, *, rebucket_every=0, threshold=0.25, ring_prune=True,
+              chunk_len=16, seed=0):
+    pop, _, batch_fn, train_fn, pcfg = linear_population_setup(
+        n_mules=M, n_steps=T, seed=seed)
+    dcfg = DistributedConfig(pop=pcfg, ring_prune=ring_prune,
+                             rebucket_every=rebucket_every,
+                             rebucket_threshold=threshold)
+    dstate = to_distributed_state(pop, dcfg)
+    return run_population_streamed(
+        dstate, compact_colocation(co), batch_fn, train_fn, pcfg,
+        jax.random.PRNGKey(7), n_steps=T, chunk_len=chunk_len,
+        method="oppcl", donate=False, mesh=_mesh(), dcfg=dcfg)
+
+
+def test_rebucket_rejects_misaligned_chunks():
+    pop, co, batch_fn, train_fn, pcfg = linear_population_setup(
+        n_mules=M, n_steps=T)
+    dcfg = DistributedConfig(pop=pcfg, rebucket_every=24)
+    with pytest.raises(ValueError, match="rebucket_every=24.*chunk_len=16"):
+        run_population_streamed(
+            to_distributed_state(pop, dcfg), compact_colocation(co),
+            batch_fn, train_fn, pcfg, jax.random.PRNGKey(0), n_steps=T,
+            chunk_len=16, donate=False, mesh=_mesh(), dcfg=dcfg)
+
+
+def test_rebucket_on_static_area_is_bitwise_identity():
+    """With a static [M] area the drift scalar is 0 at every check: no
+    swaps fire and the run is bitwise-identical to re-bucketing off."""
+    co = get_scenario("multi_area_3city").colocation(0, M, T)
+    off, _ = _streamed(co)
+    on, aux = _streamed(co, rebucket_every=16)
+    assert aux["rebucket"]["checks"] == T // 16 - 1
+    assert aux["rebucket"]["swaps"] == 0
+    np.testing.assert_array_equal(aux["rebucket"]["order"], np.arange(M))
+    assert_trees_bitwise(off, on, "static-area rebucket changed results")
+
+
+def test_rebucket_swaps_fire_and_preserve_ring_parity():
+    """The migratory trace drifts past the threshold, so swaps fire — and
+    because the swap schedule depends only on the area trace, the pruned
+    and full rings stay bitwise-equal across every swap."""
+    co = _migratory()
+    pruned, aux_p = _streamed(co, rebucket_every=16, threshold=0.1)
+    full, aux_f = _streamed(co, rebucket_every=16, threshold=0.1,
+                            ring_prune=False)
+    assert aux_p["rebucket"]["swaps"] >= 1, \
+        f"drift never tripped: {aux_p['rebucket']['drift']}"
+    order = aux_p["rebucket"]["order"]
+    assert sorted(order.tolist()) == list(range(M))
+    np.testing.assert_array_equal(order, aux_f["rebucket"]["order"])
+    assert_trees_bitwise(pruned, full, "pruned ring diverged across swap")
+    assert_trees_bitwise(aux_p["last_fid"], aux_f["last_fid"])
+
+
+def test_distributed_engine_delegates_rebucket_to_streamed():
+    co = _migratory()
+    pop, _, batch_fn, train_fn, pcfg = linear_population_setup(
+        n_mules=M, n_steps=T)
+    dcfg = DistributedConfig(pop=pcfg, rebucket_every=16,
+                             rebucket_threshold=0.1)
+    dstate = to_distributed_state(pop, dcfg)
+    via_dist, aux_d = run_population_distributed(
+        dstate, co, batch_fn, train_fn, dcfg, _mesh(),
+        jax.random.PRNGKey(7), method="oppcl", donate=False)
+    direct, aux_s = _streamed(co, rebucket_every=16, threshold=0.1)
+    assert aux_d["rebucket"]["swaps"] == aux_s["rebucket"]["swaps"]
+    np.testing.assert_array_equal(aux_d["rebucket"]["order"],
+                                  aux_s["rebucket"]["order"])
+    assert_trees_bitwise(via_dist, direct,
+                         "distributed delegation diverged from streamed")
+
+
+def test_rebucket_config_misses_the_jit_cache():
+    """DistributedConfig hashes by value into the chunk-program cache key,
+    so flipping any rebucket knob must retrace instead of silently reusing
+    a program compiled without the drift output (the closures are shared,
+    so the config is the only thing that changes between calls)."""
+    co = _migratory()
+    gen = compact_colocation(co)
+    pop, _, batch_fn, train_fn, pcfg = linear_population_setup(
+        n_mules=M, n_steps=T)
+
+    def run(threshold):
+        dcfg = DistributedConfig(pop=pcfg, rebucket_every=16,
+                                 rebucket_threshold=threshold)
+        return run_population_streamed(
+            to_distributed_state(pop, dcfg), gen, batch_fn, train_fn,
+            pcfg, jax.random.PRNGKey(7), n_steps=T, chunk_len=16,
+            method="oppcl", donate=False, mesh=_mesh(), dcfg=dcfg)
+
+    jit_cache_clear()
+    run(0.1)
+    t1 = jit_cache_stats()["traces"]
+    run(0.1)                                             # warm: no retrace
+    assert jit_cache_stats()["traces"] == t1
+    run(0.2)                                             # new threshold
+    assert jit_cache_stats()["traces"] > t1
+
+
+# ---------------------------------------------------------------------------
+# area-bitmask width
+# ---------------------------------------------------------------------------
+
+
+def test_ring_bits_auto_width_resolution():
+    pcfg = linear_population_setup(n_mules=M, n_steps=8)[4]
+    dcfg = DistributedConfig(pop=pcfg)                   # ring_bits=0: auto
+    assert _resolve_ring_bits(dcfg, 10).ring_bits == 32
+    assert _resolve_ring_bits(dcfg, 40).ring_bits == 64
+    pinned = DistributedConfig(pop=pcfg, ring_bits=32)
+    assert _resolve_ring_bits(pinned, 40).ring_bits == 32
+
+
+def test_wide_mask_prunes_what_the_narrow_fold_aliases():
+    """Areas 0 and 32 alias under a 32-bit fold (hop kept, never wrongly
+    pruned); the 64-bit mask separates them and prunes the hop."""
+    area = jnp.concatenate([jnp.zeros(4, jnp.int32),
+                            jnp.full(4, 32, jnp.int32)])
+    narrow = ring_hop_mask(area, None, 2, n_bits=32)
+    wide = ring_hop_mask(area, None, 2, n_bits=64)
+    assert bool(narrow[1])                               # aliased: kept
+    assert not bool(wide[1])                             # separated: pruned
+    assert area_bit_collision_rate(area, n_bits=32) > 0.0
+    assert area_bit_collision_rate(area, n_bits=64) == 0.0
+    # soundness either way: a genuinely shared area is never pruned
+    shared = jnp.concatenate([jnp.arange(4, dtype=jnp.int32),
+                              jnp.arange(4, dtype=jnp.int32)])
+    assert bool(ring_hop_mask(shared, None, 2, n_bits=32)[1])
+    assert bool(ring_hop_mask(shared, None, 2, n_bits=64)[1])
+    # 40 distinct areas: the one-hot union sets exactly their bits at 64
+    many = jnp.arange(40, dtype=jnp.int32)
+    assert int(area_bits(many, n_bits=64).sum()) == 40
+
+
+# ---------------------------------------------------------------------------
+# CLI validation + full-pytree migration round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_cli_rejects_misaligned_rebucket_cadence_up_front():
+    """The CLI names both numbers before any device work (the engine would
+    only raise after building chunks)."""
+    out = subprocess.run(
+        [sys.executable, "examples/run_scenario.py", "--distributed",
+         "--stream", "--rebucket-every", "100", "--stream-chunk", "64",
+         "--scenario", "multi_area_migratory", "--steps", "8",
+         "--n-mules", "8"],
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode != 0
+    err = out.stderr
+    assert "rebucket-every=100" in err and "stream-chunk=64" in err, err
+    # and re-bucketing without a sharded population is refused too
+    out = subprocess.run(
+        [sys.executable, "examples/run_scenario.py", "--rebucket-every",
+         "16", "--scenario", "multi_area_migratory"],
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode != 0
+    assert "--distributed" in out.stderr
+
+
+@pytest.mark.slow
+def test_rebucket_ring_parity_on_real_shards(multi_device_runner):
+    """On a 4-shard mesh — where pruning actually skips hops — the pruned
+    and full rings stay parity-equal across mid-run swaps: bitwise for
+    oppcl, <= 1e-5 for the gossip mix (PR 7's invariant, now under a
+    permutation of the live state)."""
+    multi_device_runner("""
+import jax, jax.numpy as jnp, numpy as np
+import dataclasses, sys, os
+sys.path.insert(0, os.path.join(os.getcwd(), "tests"))
+from conftest import linear_population_setup, assert_trees_bitwise
+from repro.core.distributed import DistributedConfig, to_distributed_state
+from repro.mobility import compact_colocation
+from repro.scenarios import get_scenario, run_population_streamed
+
+M, T = 8, 96
+co = get_scenario("multi_area_migratory").colocation(0, M, T)
+pop, _, batch_fn, train_fn, pcfg = linear_population_setup(
+    n_mules=M, n_steps=T)
+mesh = jax.sharding.Mesh(
+    np.array(jax.devices()[:4]).reshape(1, 4), ("pod", "data"))
+
+def run(method, prune):
+    dcfg = DistributedConfig(pop=pcfg, ring_prune=prune,
+                             rebucket_every=16, rebucket_threshold=0.1)
+    return run_population_streamed(
+        to_distributed_state(pop, dcfg), compact_colocation(co), batch_fn,
+        train_fn, pcfg, jax.random.PRNGKey(7), n_steps=T, chunk_len=16,
+        method=method, donate=False, mesh=mesh, dcfg=dcfg)
+
+for method, tol in (("oppcl", 0.0), ("gossip", 1e-5)):
+    pruned, aux_p = run(method, True)
+    full, aux_f = run(method, False)
+    assert aux_p["rebucket"]["swaps"] >= 1, aux_p["rebucket"]
+    np.testing.assert_array_equal(aux_p["rebucket"]["order"],
+                                  aux_f["rebucket"]["order"])
+    if tol == 0.0:
+        assert_trees_bitwise(pruned, full, method)
+    else:
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                  zip(jax.tree.leaves(pruned["mule_models"]),
+                      jax.tree.leaves(full["mule_models"])))
+        assert err <= tol, (method, err)
+print("OK")
+""", n_devices=4)
+
+
+@pytest.mark.slow
+def test_migrate_mule_state_full_pytree_roundtrip(multi_device_runner):
+    """n_pods applications of migrate_mule_state walk every flagged mule's
+    *entire* state — models, timestamps — around the pod ring bitwise,
+    while replicated leaves never move."""
+    multi_device_runner("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.distributed import migrate_mule_state
+
+mesh = jax.sharding.Mesh(
+    np.array(jax.devices()[:4]).reshape(2, 2), ("pod", "data"))
+state = {
+    "mule_models": {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 3))},
+    "mule_ts": jnp.arange(8),
+    "fixed_models": {"w": jnp.ones((4, 3))},
+    "mule_opt": None,
+}
+mask = jnp.array([True, False] * 4)
+out = dict(state)
+for _ in range(2):                       # n_pods applications round-trip
+    out = migrate_mule_state(out, mask, mesh)
+once = migrate_mule_state(state, mask, mesh)
+assert once["mule_opt"] is None          # absent carry stays absent
+for k in ("mule_models", "mule_ts"):
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(out[k])[0]),
+        np.asarray(jax.tree.leaves(state[k])[0]), err_msg=k)
+assert once["fixed_models"]["w"] is state["fixed_models"]["w"]
+print("ok")
+""", n_devices=4)

@@ -36,7 +36,9 @@ def _check_colocation(name, spec, co, n_mules, n_steps):
         assert np.asarray(co["pos"]).shape == (n_steps, n_mules, 2), \
             f"{name}: pos shape"
     if "area" in co:
-        assert np.asarray(co["area"]).shape == (n_mules,), f"{name}: area"
+        area = np.asarray(co["area"])
+        assert area.shape in ((n_mules,), (n_steps, n_mules)), \
+            f"{name}: area shape {area.shape}"
     act = np.asarray(co.get("active", np.ones(fid.shape, bool)))
     assert act.shape == (n_steps, n_mules), f"{name}: active shape"
     assert act.dtype == bool, f"{name}: active dtype"

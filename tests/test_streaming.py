@@ -40,6 +40,7 @@ def _expand_chunked(gen, n_steps, chunk_len):
     for t0 in range(0, n_steps, chunk_len):
         outs.append(gen.generate_chunk(None, t0,
                                        min(chunk_len, n_steps - t0)))
+    area0 = np.asarray(outs[0]["area"])
     return {
         "fixed_id": np.concatenate(
             [np.asarray(o["fixed_id"]) for o in outs], 0),
@@ -47,7 +48,8 @@ def _expand_chunked(gen, n_steps, chunk_len):
             [np.asarray(o["exchange"]) for o in outs], 0),
         "pos": np.concatenate([np.asarray(o["pos"]) for o in outs], 0),
         "active": np.concatenate([np.asarray(o["active"]) for o in outs], 0),
-        "area": np.asarray(outs[0]["area"]),
+        "area": (np.concatenate([np.asarray(o["area"]) for o in outs], 0)
+                 if area0.ndim == 2 else area0),
     }
 
 

@@ -74,8 +74,10 @@ def test_registry_colocation_contract(name):
     assert co["fixed_id"].shape == (t, m)
     assert co["exchange"].shape == (t, m) and co["exchange"].dtype == bool
     assert co["pos"].shape == (t, m, 2)
-    for k in ("area", "init_space", "init_area"):
+    for k in ("init_space", "init_area"):
         assert co[k].shape == (m,), k
+    # area is per-mule, or a [T, M] trace for the migratory scenarios
+    assert co["area"].shape in ((m,), (t, m)), co["area"].shape
     assert (co["fixed_id"][co["exchange"]] >= 0).all()
     assert (co["init_space"] >= 0).all() and (co["init_space"] < 4).all()
     assert (co["exchange"] & (co["fixed_id"] >= 0)).any(), \
