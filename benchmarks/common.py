@@ -268,7 +268,19 @@ def _mule_mesh(n_mules: int):
     distributed code path, but with nothing actually sharded.
     """
     n_dev = jax.device_count()
-    k = max(s for s in range(1, min(n_dev, n_mules) + 1) if n_mules % s == 0)
+    if jax.process_count() > 1:
+        # a multi-process mesh must span every process's devices (a rank
+        # with no mesh slot would never join the collectives), so the
+        # divisor search can't shrink the pool — the population has to fit
+        if n_mules % n_dev:
+            raise ValueError(
+                f"multi-process run: n_mules={n_mules} must divide over "
+                f"all {n_dev} devices ({jax.process_count()} processes x "
+                f"{jax.local_device_count()} local)")
+        k = n_dev
+    else:
+        k = max(s for s in range(1, min(n_dev, n_mules) + 1)
+                if n_mules % s == 0)
     print(f"distributed mesh: 1 pod x {k} mule shards "
           f"({n_dev} devices visible, n_mules={n_mules})"
           + (" — WARNING: k=1 shards nothing" if k == 1 else ""))
@@ -431,6 +443,15 @@ def run_experiment(cfg: ExperimentConfig) -> Dict:
                     eval_every=cfg.eval_every if dist_eval else None,
                     eval_fn=eval_hook if dist_eval else None,
                     method=cfg.method, donate=True)
+            if jax.process_count() > 1:
+                # multi-process cluster: the metrics below np-read and
+                # fancy-index the final state, which multi-host arrays
+                # refuse — pull every leaf back to host numpy (sharded
+                # leaves allgather their row blocks, replicated leaves
+                # read the local replica)
+                from repro.launch.multiprocess import gather_global
+                pop = jax.tree.map(gather_global, pop)
+                aux = jax.tree.map(gather_global, aux)
         elif cfg.stream:
             pop, aux = run_population_streamed(
                 pop, generator, batch_fn, train_fn, pcfg, ke,

@@ -16,10 +16,10 @@ Also asserts the jit cache's contract: a second same-shape
 ``run_population`` call performs zero retraces. Results land in
 ``BENCH_sweep.json`` so the perf trajectory is tracked PR over PR.
 
-``run_distributed_bench()`` — the mule-sharded path: the retired per-step
-``make_distributed_step`` driver (one jitted shard_map dispatch per time
-step) vs the scan-based ``run_population_distributed`` (ONE program, both
-freshness statistics), on a forced-host-device mesh. Also asserts zero
+``run_distributed_bench()`` — the mule-sharded path: the per-step
+``run_population_distributed_loop`` driver (one jitted shard_map dispatch
+per time step) vs the scan-based ``run_population_distributed`` (ONE
+program, both freshness statistics), on a forced-host-device mesh. Also asserts zero
 retraces on the warm call and that a vmapped distributed sweep is
 bitwise-equal per lane to sequential distributed runs. Results land in
 ``BENCH_distributed.json``. Needs ≥ 8 devices: invoked without them, it
@@ -798,10 +798,10 @@ def run_roofline_bench(n_devices: int = 8, out_path: str = _DEFAULT_ROOF_OUT,
 def run_distributed_bench(n_devices: int = 8, n_mules: int = 64,
                           steps: int = 400, n_seeds: int = 4,
                           out_path: str = _DEFAULT_DIST_OUT):
-    """Mule-sharded replay: retired per-step shard_map loop vs one scan."""
-    from repro.core.distributed import (DistributedConfig,
-                                        make_distributed_step,
-                                        to_distributed_state)
+    """Mule-sharded replay: per-step shard_map dispatch loop vs one scan."""
+    import numpy as np
+    from repro.core.distributed import DistributedConfig, to_distributed_state
+    from repro.scenarios import run_population_distributed_loop
 
     out_path = os.path.abspath(out_path)    # the child runs with cwd=root
     if jax.device_count() < n_devices:
@@ -824,25 +824,21 @@ def run_distributed_bench(n_devices: int = 8, n_mules: int = 64,
     pop, co, batch_fn, train_fn, pcfg = _setup(n_mules=n_mules, steps=steps)
     key = jax.random.PRNGKey(7)
 
-    # -- retired path: one jitted shard_map dispatch per step ----------------
-    # (make_distributed_step's flat signature and mean/std threshold)
+    # -- per-step path: one jitted shard_map dispatch per step ---------------
+    # (run_population_distributed_loop — same method step as the scan, so
+    # the measured gap is purely the dispatch tax)
     dcfg_ms = DistributedConfig(pop=PopulationConfig(
         mode=pcfg.mode, n_fixed=pcfg.n_fixed, n_mules=pcfg.n_mules,
         freshness=FreshnessConfig(stat="meanstd")))
-    step = make_distributed_step(train_fn, dcfg_ms, mesh)
-    mule_b = jnp.zeros((n_mules, 2))
 
     def loop(n):
-        mm, mts, fm = pop["mule_models"], pop["mule_ts"], pop["fixed_models"]
-        thr = pop["fresh"]["threshold"]
-        t = pop["t"]
-        fid_T, exch_T = jnp.asarray(co["fixed_id"]), jnp.asarray(co["exchange"])
-        for ti in range(n):
-            kb, ks = jax.random.split(jax.random.fold_in(key, ti))
-            bt = batch_fn(kb, ti)
-            mm, mts, fm, thr, t = step(mm, mts, fm, thr, t, fid_T[ti],
-                                       exch_T[ti], bt["fixed"], mule_b, ks)
-        jax.block_until_ready(jax.tree.leaves(mm)[0])
+        st = to_distributed_state(pop, dcfg_ms)
+        co_n = {k: np.asarray(v)[:n] if np.asarray(v).ndim == 2 else v
+                for k, v in co.items()}
+        final, _ = run_population_distributed_loop(st, co_n, batch_fn,
+                                                   train_fn, dcfg_ms, mesh,
+                                                   key)
+        jax.block_until_ready(jax.tree.leaves(final["mule_models"])[0])
 
     loop(3)                                     # compile
     t0 = time.perf_counter()
@@ -875,7 +871,6 @@ def run_distributed_bench(n_devices: int = 8, n_mules: int = 64,
     scan_med_s = time.perf_counter() - t0
 
     # -- distributed sweep: vmapped seeds must equal sequential runs ---------
-    import numpy as np
     seeds = list(range(n_seeds))
     setups = [_setup(n_mules=n_mules, steps=steps // 4, seed=s)
               for s in seeds]
@@ -964,11 +959,21 @@ def _scale_workload(n_mules: int):
 def _scale_child(cfg_json: str) -> None:
     """One (M, engine-mode) measurement, isolated in its own process so
     ``ru_maxrss`` is that engine's peak alone and the two modes can't share
-    XLA allocations. Prints one marked JSON line the parent parses."""
+    XLA allocations. Prints one marked JSON line the parent parses.
+
+    Mode ``stream_mp`` is one *rank* of a ``jax.distributed`` cluster
+    spawned by ``_spawn_scale_child_cluster``: the coordinator triple
+    arrives on the ``REPRO_MP_*`` env vars, so ``initialize_from_env``
+    must run before the first jax computation. Every rank prints its own
+    result line (digest of the process-allgathered final weights, its own
+    peak RSS) and the parent cross-checks the digests."""
     import hashlib
     import resource
 
     import numpy as np
+
+    from repro.launch.multiprocess import initialize_from_env
+    initialize_from_env()
 
     from repro.mobility import commuter_stream, materialize_generator
     from repro.scenarios import run_population_streamed
@@ -981,7 +986,46 @@ def _scale_child(cfg_json: str) -> None:
     gen = commuter_stream(0, m, steps)
 
     retraces = None
-    if mode == "stream":
+    w_host = None
+    if mode == "stream_mp":
+        # one rank of the multi-process mesh: same streamed engine, same
+        # generator, but the chunk replay runs under shard_map over a
+        # (1, global-device-count) mule mesh spanning every process
+        from jax.experimental import multihost_utils
+
+        from repro.core.distributed import (DistributedConfig,
+                                            to_distributed_state)
+        from repro.launch.mesh import make_mule_mesh
+
+        mesh = make_mule_mesh(1, jax.device_count())
+        dcfg = DistributedConfig(pop=pcfg)
+        sched_bytes = gen.schedule_bytes() + chunk_len * m * 14
+
+        def run(g):
+            return run_population_streamed(
+                to_distributed_state(init_pop(), dcfg), g, batch_fn,
+                train_fn, pcfg, key, chunk_len=chunk_len,
+                mesh=mesh, dcfg=dcfg)
+
+        _block(run(gen)[0])
+        t0 = time.perf_counter()
+        final, _ = run(gen)
+        _block(final)
+        dt = time.perf_counter() - t0
+        # horizon-free check, attributable per rank: each process has its
+        # own jit cache, so the prefixed counters pin each rank to zero
+        pid = jax.process_index()
+        before = jit_cache_stats(per_process=True)[f"p{pid}/traces"]
+        gen2 = commuter_stream(0, m, (steps // 2) // chunk_len * chunk_len)
+        _block(run(gen2)[0])
+        retraces = (jit_cache_stats(per_process=True)[f"p{pid}/traces"]
+                    - before)
+        # every rank hashes the SAME global weights: allgather across the
+        # cluster, so digest equality across ranks is bitwise cross-process
+        # parity of the final models
+        w_host = multihost_utils.process_allgather(
+            final["mule_models"]["w"], tiled=True)
+    elif mode == "stream":
         # schedule memory: the generator's O(M) params + the [chunk, M]
         # slices live inside one compiled dispatch (fid 4B + exch 1B +
         # pos 8B + active 1B per cell)
@@ -1014,8 +1058,9 @@ def _scale_child(cfg_json: str) -> None:
         _block(final)
         dt = time.perf_counter() - t0
 
-    w = np.ascontiguousarray(np.asarray(final["mule_models"]["w"],
-                                        np.float32))
+    if w_host is None:
+        w_host = np.asarray(final["mule_models"]["w"])
+    w = np.ascontiguousarray(np.asarray(w_host, np.float32))
     out = {
         "m": m, "mode": mode,
         "steps_per_sec": steps / dt, "wall_s": dt,
@@ -1024,19 +1069,30 @@ def _scale_child(cfg_json: str) -> None:
             resource.RUSAGE_SELF).ru_maxrss / 1024.0,   # linux: KB units
         "digest": hashlib.sha256(w.tobytes()).hexdigest(),
     }
+    if mode == "stream_mp":
+        out["process_id"] = int(jax.process_index())
+        out["n_processes"] = int(jax.process_count())
     if retraces is not None:
         out["retraces_new_t"] = int(retraces)
     print(_SCALE_MARK + json.dumps(out))
 
 
-def _spawn_scale_child(cfg: dict) -> dict:
+def _child_env() -> dict:
+    """Env for scale children: repo root + src on PYTHONPATH so
+    ``-m benchmarks.engine_micro`` resolves regardless of cwd."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
-    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep +
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep + root +
+                         os.pathsep +
                          env.get("PYTHONPATH", "")).rstrip(os.pathsep)
+    return env
+
+
+def _spawn_scale_child(cfg: dict) -> dict:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     res = subprocess.run([sys.executable, "-m", "benchmarks.engine_micro",
                           "--scale-child", json.dumps(cfg)],
-                         env=env, cwd=root, check=True,
+                         env=_child_env(), cwd=root, check=True,
                          capture_output=True, text=True)
     for line in res.stdout.splitlines():
         if line.startswith(_SCALE_MARK):
@@ -1045,8 +1101,41 @@ def _spawn_scale_child(cfg: dict) -> dict:
                        f"{res.stdout}\n{res.stderr}")
 
 
+def _spawn_scale_child_cluster(cfg: dict, n_processes: int,
+                               devices_per_process: int = 1) -> list:
+    """Run one ``stream_mp`` measurement as an N-process local cluster.
+
+    ``spawn_local_cluster`` launches every rank concurrently (the
+    coordinator blocks until the whole cluster dials in); each rank
+    prints its own marked result line and this returns them sorted by
+    rank. Any rank failing (non-zero exit or no result line) raises with
+    that rank's merged stdout/stderr."""
+    from repro.launch.multiprocess import spawn_local_cluster
+
+    results = spawn_local_cluster(
+        [sys.executable, "-m", "benchmarks.engine_micro",
+         "--scale-child", json.dumps(cfg)],
+        n_processes, devices_per_process,
+        base_env=_child_env(), timeout=3600)
+    ranks = []
+    for pid, res in enumerate(results):
+        if res.returncode != 0:
+            raise RuntimeError(f"scale cluster rank {pid} exited "
+                               f"{res.returncode}:\n{res.stdout}")
+        for line in res.stdout.splitlines():
+            if line.startswith(_SCALE_MARK):
+                ranks.append(json.loads(line[len(_SCALE_MARK):]))
+                break
+        else:
+            raise RuntimeError(f"scale cluster rank {pid} produced no "
+                               f"result:\n{res.stdout}")
+    return sorted(ranks, key=lambda r: r["process_id"])
+
+
 def run_scale_bench(ms=(10_000, 32_000, 100_000), steps: int = 96,
-                    chunk_len: int = 8, out_path: str = _DEFAULT_SCALE_OUT):
+                    chunk_len: int = 8, out_path: str = _DEFAULT_SCALE_OUT,
+                    mp_m: int = 1_000_000, mp_processes: int = 2,
+                    mp_devices_per_process: int = 1, mp_steps: int = 32):
     """Population-scale curve: streamed vs materialized engine over M.
 
     Per M (each mode in its own subprocess for honest peak-RSS):
@@ -1066,6 +1155,20 @@ def run_scale_bench(ms=(10_000, 32_000, 100_000), steps: int = 96,
     bytes stay T-free on the stream side (O(chunk·M) vs the materialized
     O(T·M)) and records both RSS peaks; the gated headline is streamed
     steps/sec at the largest M (``BENCH_scale.json``).
+
+    The curve then extends past single-process: ``mp_processes`` ranks
+    are spawned as a local ``jax.distributed`` cluster
+    (``_spawn_scale_child_cluster``) running the streamed engine over a
+    multi-host mule mesh at ``mp_m`` mules (``mp_steps`` steps — the
+    point is scale, not horizon). Every rank hashes the process-
+    allgathered final weights; the digests must agree bitwise across
+    ranks (``parity_sha_ok``) and each rank's half-horizon replay must
+    add zero traces. The multi-process row becomes ``max_m`` and the
+    gated ``steps_per_sec_at_max_m`` headline; the ``*_at_max_m``
+    memory/schedule keys keep reporting the largest row that has BOTH
+    engine modes (the stream-vs-materialized comparison only exists
+    single-process — materializing a [T, 10^6] schedule is the thing
+    this engine exists to avoid).
     """
     out_path = os.path.abspath(out_path)
     ms = sorted(int(m) for m in ms)
@@ -1099,25 +1202,68 @@ def run_scale_bench(ms=(10_000, 32_000, 100_000), steps: int = 96,
               f"({row['materialized_schedule_bytes'] / 1e6:.1f} MB sched, "
               f"rss {row['peak_rss_materialized_mb']:.0f} MB) | parity OK")
 
+    sp_top = curve[-1]
+    mp_row = None
+    if mp_processes and mp_processes > 1:
+        ranks = _spawn_scale_child_cluster(
+            {"m": int(mp_m), "steps": int(mp_steps),
+             "chunk_len": chunk_len, "mode": "stream_mp"},
+            mp_processes, mp_devices_per_process)
+        parity_sha_ok = len({r["digest"] for r in ranks}) == 1
+        assert parity_sha_ok, \
+            (f"M={mp_m}: final-weight digests diverged across ranks: "
+             f"{[r['digest'][:12] for r in ranks]}")
+        assert all(r["retraces_new_t"] == 0 for r in ranks), \
+            f"M={mp_m}: a rank's chunk program retraced on a new horizon"
+        r0 = ranks[0]
+        mp_row = {
+            "m": int(mp_m), "mode": "stream_mp",
+            "n_processes": int(mp_processes),
+            "stream_steps_per_sec": round(r0["steps_per_sec"], 2),
+            "stream_schedule_bytes": r0["schedule_bytes"],
+            "rss_per_process_mb": [round(r["peak_rss_mb"], 1)
+                                   for r in ranks],
+            "parity_sha_ok": parity_sha_ok,
+            "retraces_new_t": max(r["retraces_new_t"] for r in ranks),
+        }
+        curve.append(mp_row)
+        print(f"scale.M{int(mp_m)}.x{mp_processes}proc: stream "
+              f"{mp_row['stream_steps_per_sec']:.2f} steps/s "
+              f"({mp_row['stream_schedule_bytes'] / 1e6:.1f} MB sched, "
+              f"rss/proc {mp_row['rss_per_process_mb']} MB) | "
+              f"cross-process sha parity OK")
+
     top = curve[-1]
     payload = {
         "bench": "engine_micro.run_scale_bench",
         "config": {"ms": ms, "steps": steps, "chunk_len": chunk_len,
                    "scenario": "streaming_commuter", "method": "mlmule",
-                   "model": "linear_d8", "backend": jax.default_backend()},
+                   "model": "linear_d8", "backend": jax.default_backend(),
+                   "mp_m": int(mp_m), "mp_processes": int(mp_processes),
+                   "mp_devices_per_process": int(mp_devices_per_process),
+                   "mp_steps": int(mp_steps)},
         "curve": curve,
         "max_m": top["m"],
         "steps_per_sec_at_max_m": top["stream_steps_per_sec"],
-        "parity_bitwise_all_m": all(r["parity_bitwise"] for r in curve),
-        "stream_schedule_bytes_at_max_m": top["stream_schedule_bytes"],
+        "parity_bitwise_all_m": all(r["parity_bitwise"] for r in curve
+                                    if "parity_bitwise" in r),
+        # memory/schedule comparisons need both engine modes, which only
+        # the single-process rows have — these keys stay pinned to the
+        # largest such row even when the mp row extends max_m past it
+        "stream_schedule_bytes_at_max_m": sp_top["stream_schedule_bytes"],
         "materialized_schedule_bytes_at_max_m":
-            top["materialized_schedule_bytes"],
+            sp_top["materialized_schedule_bytes"],
         "schedule_bytes_ratio": round(
-            top["materialized_schedule_bytes"]
-            / top["stream_schedule_bytes"], 2),
-        "peak_rss_stream_mb_at_max_m": top["peak_rss_stream_mb"],
-        "peak_rss_materialized_mb_at_max_m": top["peak_rss_materialized_mb"],
+            sp_top["materialized_schedule_bytes"]
+            / sp_top["stream_schedule_bytes"], 2),
+        "peak_rss_stream_mb_at_max_m": sp_top["peak_rss_stream_mb"],
+        "peak_rss_materialized_mb_at_max_m":
+            sp_top["peak_rss_materialized_mb"],
         "retraces_new_t": max(r["retraces_new_t"] for r in curve),
+        "n_processes": int(mp_processes) if mp_row else 1,
+        "rss_per_process_mb": (mp_row["rss_per_process_mb"] if mp_row
+                               else [sp_top["peak_rss_stream_mb"]]),
+        "parity_sha_ok": bool(mp_row["parity_sha_ok"]) if mp_row else True,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1)
@@ -1150,7 +1296,13 @@ if __name__ == "__main__":
                          "for peak-RSS isolation)")
     ap.add_argument("--scale-child", metavar="JSON",
                     help="internal: run one (M, mode) scale measurement in "
-                         "this process and print its result line")
+                         "this process and print its result line (one rank "
+                         "of a cluster when spawned with REPRO_MP_* env)")
+    ap.add_argument("--scale-processes", type=int, default=2,
+                    help="ranks for the multi-process scale row "
+                         "(0/1 skips it)")
+    ap.add_argument("--scale-mp-m", type=int, default=1_000_000,
+                    help="population for the multi-process scale row")
     ap.add_argument("--gate-baseline", metavar="DIR",
                     help="after producing artifacts, regression-gate them "
                          "against the committed copies in DIR "
@@ -1186,7 +1338,9 @@ if __name__ == "__main__":
         run_roofline_bench(out_path=args.out_roofline)
         produced.append(("BENCH_roofline.json", args.out_roofline))
     elif args.scale:
-        run_scale_bench(out_path=args.out_scale)
+        run_scale_bench(out_path=args.out_scale,
+                        mp_m=args.scale_mp_m,
+                        mp_processes=args.scale_processes)
         produced.append(("BENCH_scale.json", args.out_scale))
     else:
         run()

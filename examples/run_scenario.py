@@ -22,7 +22,14 @@ it shards the mule population over a forced host-device mesh instead
 baselines ring their neighbor search across shards); with ``--stream`` the
 colocation schedule is generated chunk-by-chunk inside the compiled replay
 (``run_population_streamed`` — O(chunk*M) schedule memory instead of
-O(T*M), bitwise-identical results, composes with ``--distributed``).
+O(T*M), bitwise-identical results, composes with ``--distributed``); with
+``--processes N`` the whole run re-execs as an N-rank local
+``jax.distributed`` cluster (gloo CPU collectives) and the mule mesh
+spans every rank's devices — same engines, same results, per-process
+state::
+
+  PYTHONPATH=src python examples/run_scenario.py --scenario commuter \\
+      --distributed --stream --processes 2 --devices-per-process 4
 """
 import argparse
 import os
@@ -32,6 +39,33 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, _ROOT)                       # for `benchmarks`
 sys.path.insert(0, os.path.join(_ROOT, "src"))  # for `repro`
 
+def _argv_value(flag, default):
+    return (sys.argv[sys.argv.index(flag) + 1] if flag in sys.argv
+            else default)
+
+
+# multi-process lane: `--processes N` re-execs this script as an
+# N-process local `jax.distributed` cluster. Decided by argv peek for the
+# same reason as the device forcing below — the spawn must happen before
+# anything imports jax — and skipped inside the spawned children, which
+# carry the REPRO_MP_* coordinator triple in their environment instead.
+from repro.launch.multiprocess import (initialize_from_env,  # noqa: E402
+                                       spawn_local_cluster)
+
+_N_PROC = int(_argv_value("--processes", "1"))
+if _N_PROC > 1 and not os.environ.get("REPRO_MP_COORDINATOR"):
+    n_dev = int(_argv_value("--devices-per-process", "4"))
+    results = spawn_local_cluster(
+        [sys.executable] + sys.argv, _N_PROC, n_dev,
+        coordinator=_argv_value("--coordinator", None))
+    sys.stdout.write(results[0].stdout)
+    for pid, res in enumerate(results):
+        if res.returncode != 0:
+            sys.stderr.write(f"--- rank {pid} failed "
+                             f"(exit {res.returncode}) ---\n{res.stdout}\n")
+            sys.exit(res.returncode)
+    sys.exit(0)
+
 # the host-device mesh must be forced before jax initializes, so peek at
 # argv ahead of the real argparse run (which needs jax-importing modules)
 if "--distributed" in sys.argv and \
@@ -39,6 +73,10 @@ if "--distributed" in sys.argv and \
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
         + " --xla_force_host_platform_device_count=8").strip()
+
+# inside a spawned rank: bring up jax.distributed before the first jax
+# import below initializes the backend (no-op without the env triple)
+initialize_from_env()
 
 from benchmarks.common import (METHODS_MOBILE, ExperimentConfig,
                                run_experiment, run_sweep_experiment)
@@ -95,6 +133,18 @@ def main():
     ap.add_argument("--rebucket-threshold", type=float, default=0.25,
                     help="drifted-mule fraction that triggers a re-bucket "
                          "swap (see --rebucket-every)")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="re-exec this run as an N-process local "
+                         "jax.distributed cluster (requires --distributed; "
+                         "the mule mesh then spans every process's devices "
+                         "and n-mules must divide processes x "
+                         "devices-per-process; composes with --stream and "
+                         "--rebucket-every)")
+    ap.add_argument("--devices-per-process", type=int, default=4,
+                    help="forced host devices per rank for --processes")
+    ap.add_argument("--coordinator", default=None, metavar="ADDR",
+                    help="host:port for the jax.distributed coordinator "
+                         "(default: a free local port)")
     ap.add_argument("--list", action="store_true",
                     help="print the registry and exit")
     args = ap.parse_args()
@@ -104,6 +154,9 @@ def main():
             print(f"{name:18s} {SCENARIOS[name].description}")
         return
 
+    if args.processes > 1 and not args.distributed:
+        ap.error("--processes shards the population across a cluster; "
+                 "add --distributed")
     if args.distributed and args.seeds > 1:
         ap.error("--distributed runs one seed; drop --seeds")
     if args.stream and args.seeds > 1:
@@ -124,7 +177,9 @@ def main():
     print(f"scenario={spec.name} mode={spec.mode} dist={spec.dist} "
           f"task={spec.task} method={args.method}"
           + (" [distributed]" if args.distributed else "")
-          + (" [streamed]" if args.stream else ""))
+          + (" [streamed]" if args.stream else "")
+          + (f" [{args.processes} processes]" if args.processes > 1
+             else ""))
     cfg = ExperimentConfig(scenario=args.scenario, method=args.method,
                            steps=args.steps, n_mules=args.n_mules,
                            seed=args.seed, distributed=args.distributed,

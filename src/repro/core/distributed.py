@@ -20,9 +20,13 @@ peer-encounter baselines (gossip/oppcl/mlmule+gossip) lower to a ring
 axis — so every ``METHODS_MOBILE`` method shards. The whole replay —
 collectives included — then runs as one ``lax.scan`` under ``shard_map``
 (``repro.scenarios.run_population_distributed``), so an experiment is a
-single XLA program instead of thousands of per-step dispatches.
-``make_distributed_step`` below is that retired per-step path, kept (like
-``run_population_loop`` single-host) as the parity/bench reference.
+single XLA program instead of thousands of per-step dispatches.  The old
+per-step ``make_distributed_step`` — a dense one-hot segment-reduce per
+model leaf — has been deleted outright: the fused ``encounter_mix``
+schedule (Pallas-tiled on TPU, its bitwise reference elsewhere) is the
+*only* encounter path on the distributed engines, and the per-step
+dispatch baseline the benchmarks time is the scan engine driven one
+chunk per step (``run_population_distributed_loop``).
 
 Freshness semantics: the scan engine closes the formerly documented
 mean/std deviation — with ``FreshnessConfig.stat == "median"`` (default)
@@ -30,10 +34,15 @@ delivered ages feed an associative histogram sketch whose per-step shard
 contributions merge under the same psum as the aggregation, recovering the
 paper's Sec 3.1 median/MAD to bin accuracy (``repro.core.freshness``).
 ``stat == "meanstd"`` keeps the legacy per-step mean/std EMA, reading
-alpha/beta from ``FreshnessConfig`` like every other engine path (the
-retired per-step path always uses mean/std with its own
-``DistributedConfig.ema_alpha/ema_beta`` knobs — identical at the shared
-defaults).
+alpha/beta from ``FreshnessConfig`` like every other engine path.
+
+Multi-process: every collective here is also run under ``jax.distributed``
+(``launch.multiprocess`` bring-up, gloo CPU backend in tests/benches).
+Float cross-shard reductions go through ``ordered_psum`` — gloo and
+single-process XLA reduce in different orders, and an unordered ``psum``
+would drift ULPs off the pinned cross-topology bitwise parity. Integer
+reductions (counts, ring need-masks, the re-bucketing area gather) are
+exact under any order and stay on ``lax.psum``.
 
 Two collective schedules are provided (Perf hillclimb lever):
 - ``cross_pod=True``  (baseline): F fixed devices replicated everywhere;
@@ -53,7 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.freshness import (FreshnessConfig, age_histogram,
                                   init_freshness_sketch)
@@ -82,10 +91,6 @@ class DistributedConfig:
     # through the mesh. 0 = off (build-time bucketing only, PR 7 behavior).
     rebucket_every: int = 0
     rebucket_threshold: float = 0.25
-    # legacy knobs of the retired make_distributed_step ONLY; the scan
-    # engine reads alpha/beta (and stat) from pop.freshness instead
-    ema_alpha: float = 0.1
-    ema_beta: float = 1.0
 
 
 def _tree_mix(a, b, gamma):
@@ -95,98 +100,71 @@ def _tree_mix(a, b, gamma):
     return jax.tree.map(mix, a, b)
 
 
-def make_distributed_step(train_fn: Callable, dcfg: DistributedConfig,
-                          mesh: Mesh):
-    """Builds a jitted distributed population step (RETIRED per-step path).
+def ordered_psum(x, axis_name):
+    """Order-deterministic float ``psum``: all_gather + rank-order fold.
 
-    One ``shard_map`` dispatch per simulation step with flat array
-    arguments and the legacy mean/std threshold — the driver the scan
-    engine (``repro.scenarios.run_population_distributed``) replaced. Kept
-    as the parity/bench reference; ``benchmarks/engine_micro.py`` times the
-    gap (the dispatch tax is the whole point of the scan).
-
-    State layout (shardings set by the caller via NamedSharding):
-      mule_models [M, ...]   sharded P(data_axis)
-      mule_ts     [M]        sharded P(data_axis)
-      fixed_models [F, ...]  replicated
-      threshold   [F]        replicated
-      t           scalar     replicated
-    info: fixed_id [M] int32, exchange [M] bool — sharded P(data_axis).
-    batches: {"fixed": [F, B, ...] replicated, "mule": [M, B, ...] sharded}.
+    ``lax.psum`` leaves the float reduction order to the backend — XLA's
+    single-process all-reduce and the gloo cross-process one disagree,
+    so a raw psum breaks the engines' cross-topology bitwise pins (the
+    same run over 1 or N processes). ``all_gather`` is pure data
+    movement (bitwise-safe on both), and a left-to-right fold over the
+    gathered shards fixes the reduction order as a function of the mesh
+    axis alone. Axis sizes here are ring-scale, so the serial fold is
+    free next to the payload it reduces. Integer reductions are exact
+    under any order — keep those on ``lax.psum``.
     """
-    cfg = dcfg.pop
-    axes = (dcfg.pod_axis, dcfg.data_axis) if dcfg.pod_axis else (dcfg.data_axis,)
-    reduce_axes = axes if dcfg.cross_pod else (dcfg.data_axis,)
-    mspec = P(dcfg.data_axis)     # population axis
-    rspec = P()                    # replicated
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    g = jax.lax.all_gather(x, axes, axis=0, tiled=False)
+    return jax.tree.map(
+        lambda l: functools.reduce(
+            lambda a, b: a + b, [l[i] for i in range(l.shape[0])]), g)
 
-    def step(mule_models, mule_ts, fixed_models, threshold, t,
-             fixed_id, exchange, fixed_batches, mule_batches, key):
-        deliver = exchange & (fixed_id >= 0)
-        ages = t - mule_ts
-        fresh_ok = deliver & (ages <= threshold[jnp.maximum(fixed_id, 0)])
 
-        # -- local contributions + global reduce ----------------------------
-        a_loc = (jax.nn.one_hot(jnp.maximum(fixed_id, 0), cfg.n_fixed, axis=0)
-                 * fresh_ok[None, :].astype(jnp.float32))        # [F, M_loc]
+def ordered_pmean(x, axis_name):
+    """``ordered_psum`` divided by the axis size — deterministic pmean."""
+    s = ordered_psum(x, axis_name)
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    n = 1
+    for ax in axes:
+        n = n * jax.lax.psum(1, ax)
+    return jax.tree.map(lambda l: l / n, s)
 
-        def seg_sum(leaf):
-            flat = leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
-            return (a_loc @ flat).reshape((cfg.n_fixed,) + leaf.shape[1:])
 
-        part = jax.tree.map(seg_sum, mule_models)
-        counts = jnp.sum(a_loc, axis=1)
-        part = jax.lax.psum(part, reduce_axes)
-        counts = jax.lax.psum(counts, reduce_axes)
-        has = (counts > 0).astype(jnp.float32)
-        agg = jax.tree.map(
-            lambda l: l / jnp.maximum(counts, 1.0).reshape(
-                (-1,) + (1,) * (l.ndim - 1)), part)
-        fixed_models = _tree_mix(fixed_models, agg, cfg.gamma * has)
+@functools.lru_cache(maxsize=8)
+def _bucket_order_program(mesh: Mesh, data_axis: str, n_shards: int,
+                          m_loc: int):
+    """Compiled replicated stable argsort of the sharded area vector."""
+    def order_fn(a_loc):
+        i = jax.lax.axis_index(data_axis)
+        placed = jax.lax.dynamic_update_slice(
+            jnp.zeros((n_shards * m_loc,), jnp.int32),
+            a_loc.astype(jnp.int32), (i * m_loc,))
+        full = jax.lax.psum(placed, data_axis)        # int32: exact
+        order = jnp.argsort(full, stable=True).astype(jnp.int32)
+        return order, full
 
-        # -- freshness threshold: EMA of (mean + beta*std) of delivered ages --
-        age_sum = jax.lax.psum(
-            jnp.sum(a_loc * ages[None, :], axis=1), reduce_axes)
-        age_sq = jax.lax.psum(
-            jnp.sum(a_loc * (ages ** 2)[None, :], axis=1), reduce_axes)
-        mean_age = age_sum / jnp.maximum(counts, 1.0)
-        var_age = jnp.maximum(age_sq / jnp.maximum(counts, 1.0) - mean_age ** 2, 0.0)
-        target = mean_age + dcfg.ema_beta * jnp.sqrt(var_age)
-        threshold = jnp.where(
-            counts > 0,
-            (1 - dcfg.ema_alpha) * threshold + dcfg.ema_alpha * target,
-            threshold)
+    return jax.jit(shard_map(
+        order_fn, mesh=mesh, in_specs=(P(data_axis),),
+        out_specs=(P(), P()), check_rep=False))
 
-        # -- training (replicated for fixed mode; shard-local for mobile) ----
-        if cfg.mode == "fixed":
-            keys = jax.random.split(key, cfg.n_fixed)
-            trained = jax.vmap(train_fn)(fixed_models, fixed_batches, keys)
-            fixed_models = _tree_mix(fixed_models, trained, has)
 
-        per_mule_fixed = jax.tree.map(
-            lambda l: l[jnp.maximum(fixed_id, 0)], fixed_models)
-        gm = cfg.gamma * deliver.astype(jnp.float32)
-        mule_models = _tree_mix(mule_models, per_mule_fixed, gm)
+def global_bucket_order(area_last, mesh, data_axis: str = "data"):
+    """Multi-host-safe bucket order of the current (sharded) area vector.
 
-        if cfg.mode == "mobile":
-            m_loc = fixed_id.shape[0]
-            shard_key = jax.random.fold_in(
-                key, jax.lax.axis_index(dcfg.data_axis))
-            keys = jax.random.split(shard_key, m_loc)
-            trained = jax.vmap(train_fn)(mule_models, mule_batches, keys)
-            mule_models = _tree_mix(mule_models, trained,
-                                    deliver.astype(jnp.float32))
-
-        mule_ts = jnp.where(deliver, t, mule_ts)
-        return mule_models, mule_ts, fixed_models, threshold, t + 1.0
-
-    sharded = shard_map(
-        step, mesh=mesh,
-        in_specs=(mspec, mspec, rspec, rspec, rspec,
-                  mspec, mspec, rspec, mspec, rspec),
-        out_specs=(mspec, mspec, rspec, rspec, rspec),
-        check_rep=False)
-    return jax.jit(sharded)
+    The PR 9 drift swap argsorted ``np.asarray(area_last)`` on the host —
+    fine while one process owned the whole [M] vector, impossible once it
+    shards across processes. Here every shard contributes its block
+    through an exact integer psum (dynamic placement into the zeroed
+    global vector), each process argsorts the identical replicated copy
+    inside the compiled program, and the replicated ``(order, area)``
+    pair comes back readable on every process. Stable argsort matches
+    ``np.argsort(kind="stable")`` exactly, so single-process rebucketing
+    decisions (and their bitwise pins) are unchanged.
+    """
+    m = int(area_last.shape[0])
+    n_shards = int(mesh.shape[data_axis])
+    fn = _bucket_order_program(mesh, data_axis, n_shards, m // n_shards)
+    return fn(area_last)
 
 
 def init_distributed_freshness(n_fixed: int, cfg: FreshnessConfig):
@@ -318,6 +296,9 @@ def migrate_mule_state(state: Dict[str, Any], move_mask: jnp.ndarray,
     return {**state, **swapped}
 
 
+_row_gather = jax.jit(lambda l, o: l[jnp.asarray(o)])
+
+
 def bucket_mule_order(area) -> np.ndarray:
     """Area ids -> [M] permutation grouping mules by spatial bucket.
 
@@ -368,12 +349,15 @@ def reorder_mule_state(state: Dict[str, Any], order) -> Dict[str, Any]:
     the same simulation with mules renumbered; replicated leaves pass
     through. Mid-run re-bucketing relies on this covering the *full* live
     state: a key it missed would silently cross-wire a mule's history.
+    The gather runs jitted so it also applies to state sharded across
+    processes (eager gathers reject multi-host arrays); on one process
+    the jitted gather is bitwise the old eager one.
     """
-    order = jnp.asarray(np.asarray(order))
+    order = np.asarray(order)
     out = dict(state)
     for k in out:
         if k.startswith("mule") and out[k] is not None:
-            out[k] = jax.tree.map(lambda l: l[order], out[k])
+            out[k] = jax.tree.map(lambda l: _row_gather(l, order), out[k])
     return out
 
 

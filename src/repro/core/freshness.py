@@ -32,8 +32,13 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-INF = jnp.float32(1e30)
+# np, not jnp: a module-level jnp scalar would initialize the jax backend
+# at import time, which breaks jax.distributed bring-up (initialize()
+# must run before the first computation); as a traced constant the two
+# are bitwise identical
+INF = np.float32(1e30)
 
 
 @dataclasses.dataclass(frozen=True)

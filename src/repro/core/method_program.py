@@ -252,11 +252,13 @@ def _space_exchange_distributed(train_fn: Callable, dcfg) -> Callable:
     Every per-step reduction — model contributions of all leaves, receipt
     counts, and the freshness statistic (age moments or histogram bins) —
     is packed into columns of a single [F, ...] matrix so the whole step
-    costs exactly one ``psum``. On a scan of thousands of steps the
+    costs exactly one collective (an ``ordered_psum``: all_gather plus a
+    rank-order fold, so the float reduction order is identical across
+    backends and process counts). On a scan of thousands of steps the
     collective rendezvous is the dominant cost; fusing ~10 all-reduces
     into 1 is most of the engine's win.
     """
-    from repro.core.distributed import _tree_mix
+    from repro.core.distributed import _tree_mix, ordered_psum
     cfg = dcfg.pop
     fcfg = cfg.freshness
     axes = ((dcfg.pod_axis, dcfg.data_axis) if dcfg.pod_axis
@@ -303,7 +305,11 @@ def _space_exchange_distributed(train_fn: Callable, dcfg) -> Callable:
             bins = age_bin_onehot(ages, fcfg)                  # [M_loc, B]
             cols_a.append(d_loc @ jnp.concatenate(
                 [bins, jnp.ones((m_loc, 1), jnp.float32)], axis=1))
-        fused = jax.lax.psum(jnp.concatenate(cols_a, axis=1), reduce_axes)
+        # ordered_psum, not lax.psum: the fold order of this float payload
+        # must not depend on the backend, or multi-process runs drift ULPs
+        # off the single-process bitwise pins (integer reductions elsewhere
+        # are exact and stay raw)
+        fused = ordered_psum(jnp.concatenate(cols_a, axis=1), reduce_axes)
 
         d_total = sum(sizes)
         part_flat = fused[:, :d_total]

@@ -57,6 +57,7 @@ numpy colocation dict — the O(T * M) parity reference, playing the role
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -416,19 +417,26 @@ def reorder_generator_arrays(generator, arrays: Dict[str, Any],
     the mule now in slot ``p``); replicated leaves pass through untouched.
     This is what the streamed engine's mid-run re-bucketing applies to
     ``generator.arrays()`` at a swap, so every later ``expand`` emits its
-    columns in the post-swap layout.
+    columns in the post-swap layout. The gather runs jitted so arrays
+    placed across a multi-process mesh reorder in place (an eager gather
+    rejects them); single-process results are bitwise unchanged.
     """
-    order = jnp.asarray(np.asarray(order))
+    order = np.asarray(order)
     sentinel = "_mule_"
     specs = generator.specs(sentinel)
 
     def one(spec, leaf):
         axes = tuple(spec)
         if sentinel in axes:
-            return jnp.take(leaf, order, axis=axes.index(sentinel))
+            return _axis_gather(leaf, order, axes.index(sentinel))
         return leaf
 
     return {k: one(specs[k], v) for k, v in arrays.items()}
+
+
+@functools.partial(jax.jit, static_argnums=2)
+def _axis_gather(leaf, order, axis):
+    return jnp.take(leaf, jnp.asarray(order), axis=axis)
 
 
 def materialize_generator(gen, n_steps: Optional[int] = None,

@@ -16,9 +16,9 @@ schedule included — under ``shard_map`` over the mesh mule (``data``) axis:
 mule state and colocation columns shard, fixed-device state replicates, and
 ``repro.core.distributed.make_distributed_method_step`` supplies the
 step, so a mule-sharded experiment is ONE program instead of one
-``shard_map`` dispatch per step (the retired ``make_distributed_step``
-path, preserved by ``run_population_distributed_loop`` as the parity
-reference). Every ``METHODS_MOBILE`` method lowers to the distributed
+``shard_map`` dispatch per step (``run_population_distributed_loop``
+preserves the per-step dispatch pattern as the parity/bench reference).
+Every ``METHODS_MOBILE`` method lowers to the distributed
 step through the one ``repro.core.method_program`` table — the
 peer-encounter baselines cross shards via its ring ``ppermute``
 exchange. Multi-seed sweeps compose: ``run_sweep_distributed`` stacks the
@@ -115,9 +115,19 @@ _JIT_CACHE_MAX = 32
 _STATS = {"traces": 0, "hits": 0, "misses": 0}
 
 
-def jit_cache_stats() -> Dict[str, int]:
-    """Snapshot of engine cache counters (traces/hits/misses)."""
-    return dict(_STATS)
+def jit_cache_stats(per_process: bool = False) -> Dict[str, int]:
+    """Snapshot of engine cache counters (traces/hits/misses).
+
+    ``per_process=True`` prefixes every key with ``p{process_index}/`` so
+    retrace assertions aggregated across a ``jax.distributed`` cluster
+    (each process has its own cache and counters) stay attributable —
+    the scale bench merges the dicts from every rank and pins each
+    ``p*/retraces``-style delta to zero by name.
+    """
+    if not per_process:
+        return dict(_STATS)
+    prefix = f"p{jax.process_index()}/"
+    return {prefix + k: v for k, v in _STATS.items()}
 
 
 def jit_cache_clear() -> None:
@@ -125,6 +135,13 @@ def jit_cache_clear() -> None:
     _JIT_CACHE.clear()
     for k in _STATS:
         _STATS[k] = 0
+
+
+# jitted gathers for the between-chunk re-bucket swap: an eager gather on
+# an array whose shards span processes is rejected outside jit, and under
+# jit the same gather is bitwise-identical on a single process
+_take_rows = jax.jit(lambda l, o: jnp.take(l, jnp.asarray(o), axis=0))
+_take_cols = jax.jit(lambda l, o: jnp.take(l, jnp.asarray(o), axis=1))
 
 
 def _sig(tree: Any) -> Any:
@@ -345,7 +362,11 @@ def _build_chunk_replay(generator, batches: Any, train_fn: TrainFn,
         area_end = area_arr[-1] if area_arr.ndim == 2 else area_arr
         drift = jnp.mean((area_end != bucket_area).astype(jnp.float32))
         if pmean_axis:
-            drift = jax.lax.pmean(drift, pmean_axis)
+            # ordered, not lax.pmean: the swap decision must be identical
+            # on every process/backend or ranks could disagree on whether
+            # to reorder (and single- vs multi-process runs would diverge)
+            from repro.core.distributed import ordered_pmean
+            drift = ordered_pmean(drift, pmean_axis)
         return st, last_fid, drift, jnp.asarray(area_end, jnp.int32), evals
 
     return chunk_replay
@@ -653,7 +674,8 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
     rebucket = rb > 0
     rb_aux = None
     if rebucket:
-        from repro.core.distributed import reorder_mule_state
+        from repro.core.distributed import (global_bucket_order,
+                                            reorder_mule_state)
         from repro.mobility.streaming import reorder_generator_arrays
         a0 = generator.expand(gen_arrays, None, jnp.asarray(0, jnp.int32),
                               1)["area"]
@@ -661,10 +683,37 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
         threshold = float(getattr(dcfg, "rebucket_threshold", 0.25))
         rb_aux = {"checks": 0, "swaps": 0, "drift": [],
                   "order": np.arange(n_mules)}
+    # under jax.distributed the mesh spans processes: commit every input
+    # through the placement helpers (sharded leaves hand the runtime only
+    # this process's row block); single-process runs skip all of this
+    multiproc = mesh is not None and jax.process_count() > 1
+    if multiproc:
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.multiprocess import (host_replicated, put_global,
+                                               put_global_tree)
+        in_specs, _ = _streamed_specs(state, generator, batches, dcfg,
+                                      rebucket=rebucket)
+        ax = dcfg.data_axis
+        state = put_global_tree(state, mesh, in_specs[0])
+        last = put_global(last, mesh, P(ax))
+        gen_arrays = put_global_tree(gen_arrays, mesh, generator.specs(ax))
+        key = put_global(key, mesh, P())
+        if context is not None:
+            context = put_global_tree(
+                context, mesh, jax.tree.map(lambda _: P(), context))
+        if rebucket:
+            bucket_area = put_global(bucket_area, mesh, P(ax))
+        batch_specs = in_specs[5] if rebucket else in_specs[4]
     for t0 in range(0, n_steps, chunk_len):
         cl = min(chunk_len, n_steps - t0)
         stacked_chunk = (None if dynamic else
                          jax.tree.map(lambda l: l[t0:t0 + cl], batches))
+        t0_dev = jnp.asarray(t0, jnp.int32)
+        if multiproc:
+            t0_dev = put_global(t0_dev, mesh, P())
+            if stacked_chunk is not None:
+                stacked_chunk = put_global_tree(stacked_chunk, mesh,
+                                                batch_specs)
         fn = get_compiled_chunk_replay(
             state, generator, gen_arrays, batches, context, key, train_fn,
             pcfg, method=method, eval_every=eval_every, eval_fn=eval_fn,
@@ -672,31 +721,44 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
             mesh=mesh, dcfg=dcfg, rebucket=rebucket)
         if rebucket:
             state, last, drift, area_last, ev = fn(
-                state, last, jnp.asarray(t0, jnp.int32), gen_arrays,
+                state, last, t0_dev, gen_arrays,
                 bucket_area, stacked_chunk, context, key)
         else:
-            state, last, ev = fn(state, last, jnp.asarray(t0, jnp.int32),
+            state, last, ev = fn(state, last, t0_dev,
                                  gen_arrays, stacked_chunk, context, key)
         if ev is not None:
             evals_chunks.append(ev)
         t_end = t0 + cl
         if rebucket and t_end % rb == 0 and t_end < n_steps:
             rb_aux["checks"] += 1
-            d = float(drift)
+            # drift is replicated; multi-process arrays span devices that
+            # np.asarray refuses, so read this process's replica
+            d = float(drift) if not multiproc else \
+                float(host_replicated(drift))
             rb_aux["drift"].append(d)
             if d > threshold:
-                area_now = np.asarray(area_last)
-                order = np.argsort(area_now, kind="stable")
+                # the bucket order comes out of a compiled exact-int psum
+                # + replicated stable argsort (multi-host safe: the [M]
+                # area vector is sharded across processes, so no single
+                # host could np.argsort it) — bitwise the same decision
+                # as the former host-side np.argsort(kind="stable")
+                order_r, area_r = global_bucket_order(
+                    area_last, mesh, dcfg.data_axis)
+                if multiproc:
+                    order = host_replicated(order_r)
+                    area_now = host_replicated(area_r)
+                else:
+                    order = np.asarray(order_r)
+                    area_now = np.asarray(area_r)
                 if not np.array_equal(order, np.arange(n_mules)):
-                    odev = jnp.asarray(order)
                     state = reorder_mule_state(state, order)
-                    last = jnp.take(last, odev, axis=0)
+                    last = _take_rows(last, order)
                     gen_arrays = reorder_generator_arrays(
                         generator, gen_arrays, order)
                     if not dynamic:
                         batches = {
                             k: (jax.tree.map(
-                                lambda l: jnp.take(l, odev, axis=1), v)
+                                lambda l: _take_cols(l, order), v)
                                 if k == "mule" else v)
                             for k, v in batches.items()}
                     rb_aux["order"] = rb_aux["order"][order]
@@ -704,6 +766,8 @@ def run_population_streamed(state: Dict[str, Any], generator, batches: Any,
                 # the current area in the (possibly) new layout is the
                 # baseline the next drift check measures against
                 bucket_area = jnp.asarray(area_now[order], jnp.int32)
+                if multiproc:
+                    bucket_area = put_global(bucket_area, mesh, P(ax))
     n_ev = n_steps // eval_every if (eval_fn is not None and eval_every) else 0
     steps = (np.arange(n_ev) + 1) * eval_every - 1 if n_ev else \
         np.zeros((0,), int)
@@ -1002,6 +1066,23 @@ def run_population_distributed(state: Dict[str, Any],
         mesh = _auto_mesh(method, fid.shape[1], dcfg)
     _check_mule_sharding(fid.shape[1], mesh, dcfg)
     stacked = None if callable(batches) else batches
+    if jax.process_count() > 1:
+        # multi-process mesh: commit every input explicitly so each
+        # process materializes only its shard of the mule columns
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.multiprocess import put_global, put_global_tree
+        in_specs, _ = _distributed_specs(state, batches, dcfg, vmapped=False,
+                                         area_dyn=area.ndim == 2)
+        state = put_global_tree(state, mesh, in_specs[0])
+        fid, exch, pos, area, act = (
+            put_global(x, mesh, s) for x, s in
+            zip((fid, exch, pos, area, act), in_specs[1:6]))
+        if stacked is not None:
+            stacked = put_global_tree(stacked, mesh, in_specs[6])
+        if context is not None:
+            context = put_global_tree(
+                context, mesh, jax.tree.map(lambda _: P(), context))
+        key = put_global(key, mesh, P())
     fn = get_compiled_replay(state, fid, exch, pos, area, act, batches,
                              context, key, train_fn, dcfg.pop, method=method,
                              eval_every=eval_every, eval_fn=eval_fn,
@@ -1023,9 +1104,14 @@ def run_population_distributed_loop(state: Dict[str, Any],
     """Per-step distributed driver: the parity/bench reference.
 
     One jitted ``shard_map`` dispatch per simulation step — the dispatch
-    pattern ``make_distributed_step`` imposed on every experiment, now
-    driven through the same step function and key discipline as the scan
-    so ``run_population_distributed`` is pinned to it bitwise.
+    pattern the deleted dense per-step engine imposed on every
+    experiment, now driven through the same method-table step function
+    and key discipline as the scan (the fused ``encounter_mix`` schedule
+    is the only distributed encounter path), so
+    ``run_population_distributed`` is pinned to it bitwise and the bench
+    gap between the two is purely the dispatch tax. The jitted step is
+    memoized in the engine jit cache, so repeat replays of the same
+    signature dispatch warm.
 
     Returns ``(final_state, last_fid)`` (``last_fid`` sharded like the
     mule axis).
@@ -1046,12 +1132,28 @@ def run_population_distributed_loop(state: Dict[str, Any],
     }
     info_specs = {"fixed_id": P(ax), "exchange": P(ax), "pos": P(ax),
                   "area": P(ax), "active": P(ax), "t": P()}
-    step_core = make_distributed_method_step(method, train_fn, dcfg,
-                                             mesh=mesh)
-    step = jax.jit(shard_map(
-        step_core, mesh=mesh,
-        in_specs=(state_specs, info_specs, P(), P()),
-        out_specs=state_specs, check_rep=False))
+    cache_key = ("dist_loop_step", method, dcfg, mesh, train_fn,
+                 _sig(state), area_dyn)
+    step = _JIT_CACHE.get(cache_key)
+    if step is None:
+        _STATS["misses"] += 1
+        step_core = make_distributed_method_step(method, train_fn, dcfg,
+                                                 mesh=mesh)
+
+        def counted(st, info, bt, k):
+            _STATS["traces"] += 1      # python side effect: fires per trace
+            return step_core(st, info, bt, k)
+
+        step = jax.jit(shard_map(
+            counted, mesh=mesh,
+            in_specs=(state_specs, info_specs, P(), P()),
+            out_specs=state_specs, check_rep=False))
+        _JIT_CACHE[cache_key] = step
+        while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+            _JIT_CACHE.popitem(last=False)
+    else:
+        _STATS["hits"] += 1
+        _JIT_CACHE.move_to_end(cache_key)
 
     dynamic = callable(batches)
     last_fid = jnp.zeros((n_mules,), jnp.int32)

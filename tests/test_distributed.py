@@ -178,10 +178,11 @@ print("OK")
 @pytest.mark.slow
 def test_distributed_engine_matches_reference(multi_device_runner):
     multi_device_runner("""
-import jax, jax.numpy as jnp
+import jax, jax.numpy as jnp, numpy as np
 from repro.core.population import PopulationConfig, init_population, population_step
-from repro.core.distributed import DistributedConfig, make_distributed_step
+from repro.core.distributed import DistributedConfig, to_distributed_state
 from repro.core.freshness import FreshnessConfig
+from repro.scenarios import run_population_distributed_loop
 
 mesh = jax.make_mesh((2, 4), ("pod", "data"))
 F, M = 8, 16
@@ -197,16 +198,15 @@ fixed_batches = jnp.zeros((F, 2))
 key = jax.random.PRNGKey(7)
 ref = population_step(dict(state), info, {"fixed": fixed_batches, "mule": None},
                       train_fn, pcfg, key)
-step = make_distributed_step(train_fn, DistributedConfig(pop=pcfg), mesh)
-thr = jnp.full((F,), 1e9, jnp.float32)
-with mesh:
-    mm, mts, fm, nthr, t = step(state["mule_models"], state["mule_ts"],
-                                state["fixed_models"], thr, state["t"],
-                                fid, exch, fixed_batches, jnp.zeros((M,2)), key)
+dcfg = DistributedConfig(pop=pcfg)
+co = {"fixed_id": np.asarray(fid)[None], "exchange": np.asarray(exch)[None]}
+final, _ = run_population_distributed_loop(
+    to_distributed_state(state, dcfg), co,
+    {"fixed": fixed_batches[None], "mule": None}, train_fn, dcfg, mesh, key)
 err_f = max(float(jnp.max(jnp.abs(a-b))) for a,b in
-            zip(jax.tree.leaves(fm), jax.tree.leaves(ref["fixed_models"])))
+            zip(jax.tree.leaves(final["fixed_models"]), jax.tree.leaves(ref["fixed_models"])))
 err_m = max(float(jnp.max(jnp.abs(a-b))) for a,b in
-            zip(jax.tree.leaves(mm), jax.tree.leaves(ref["mule_models"])))
+            zip(jax.tree.leaves(final["mule_models"]), jax.tree.leaves(ref["mule_models"])))
 assert err_f < 1e-6 and err_m < 1e-6, (err_f, err_m)
 print("OK")
 """)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.mule_cnn import CNNConfig
-from repro.core.distributed import DistributedConfig, make_distributed_step
+from repro.core.distributed import DistributedConfig, to_distributed_state
 from repro.core.freshness import FreshnessConfig
 from repro.core.population import (PopulationConfig, init_population,
                                    population_step)
@@ -127,8 +127,12 @@ def test_engine_stacked_batches_path():
 
 def test_distributed_step_matches_single_host_aggregation():
     """The parity the distributed.py docstring promises: with the freshness
-    filter accepting everything, the shard_map engine and the single-host
-    engine agree on aggregation (single-device mesh, in-process)."""
+    filter accepting everything, the distributed method step — the fused
+    ``encounter_mix`` collective schedule, the only distributed encounter
+    path — and the single-host engine agree on aggregation (single-device
+    mesh, in-process, driven one dispatch per step by
+    ``run_population_distributed_loop``)."""
+    from repro.scenarios import run_population_distributed_loop
     mesh = jax.sharding.Mesh(
         np.array(jax.devices()[:1]).reshape(1, 1), ("pod", "data"))
     n_fixed, n_mules = 4, 8
@@ -152,15 +156,17 @@ def test_distributed_step_matches_single_host_aggregation():
     ref = population_step(dict(state), info,
                           {"fixed": fixed_batches, "mule": None},
                           train_fn, pcfg, key)
-    step = make_distributed_step(train_fn, DistributedConfig(pop=pcfg), mesh)
-    with mesh:
-        mm, mts, fm, _, _ = step(state["mule_models"], state["mule_ts"],
-                                 state["fixed_models"],
-                                 jnp.full((n_fixed,), 1e9, jnp.float32),
-                                 state["t"], fid, exch, fixed_batches,
-                                 jnp.zeros((n_mules, 2)), key)
-    for a, b in zip(jax.tree.leaves(fm), jax.tree.leaves(ref["fixed_models"])):
+    dcfg = DistributedConfig(pop=pcfg)
+    co = {"fixed_id": np.asarray(fid)[None], "exchange": np.asarray(exch)[None]}
+    final, _ = run_population_distributed_loop(
+        to_distributed_state(state, dcfg), co,
+        {"fixed": fixed_batches[None], "mule": None},
+        train_fn, dcfg, mesh, key)
+    for a, b in zip(jax.tree.leaves(final["fixed_models"]),
+                    jax.tree.leaves(ref["fixed_models"])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
-    for a, b in zip(jax.tree.leaves(mm), jax.tree.leaves(ref["mule_models"])):
+    for a, b in zip(jax.tree.leaves(final["mule_models"]),
+                    jax.tree.leaves(ref["mule_models"])):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
-    np.testing.assert_array_equal(np.asarray(mts), np.asarray(ref["mule_ts"]))
+    np.testing.assert_array_equal(np.asarray(final["mule_ts"]),
+                                  np.asarray(ref["mule_ts"]))
